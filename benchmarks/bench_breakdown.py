@@ -1,0 +1,76 @@
+"""Paper Table 1: running-time breakdown of the algorithm sections
+(init / map+fill / update / results) for an easy (Roos&Arnold) and an
+intensive (Ridge) integrand, across n_eval scales.
+
+cuVegas' finding: fill dominates (36-99%) and grows with n_eval; everything
+else amortizes.  Same decomposition measured on the JAX engine.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import integrator as I
+from repro.core import fill as F
+from repro.core import map as vmap_
+from repro.core import strat
+from repro.core.integrands import make_ridge, make_roos_arnold
+from .common import emit
+
+
+def _sections(ig, neval):
+    cfg = I.VegasConfig(neval=neval, max_it=4, ninc=1024,
+                        chunk=min(neval, 1 << 14)).resolve(ig.dim)
+    t0 = time.perf_counter()
+    state = I.init_state(ig, cfg, jax.random.PRNGKey(0))
+    jax.block_until_ready(state.edges)
+    t_init = time.perf_counter() - t0
+
+    fill_j = jax.jit(functools.partial(
+        F.fill_reference, integrand=ig, nstrat=cfg.nstrat, n_cap=cfg.n_cap,
+        chunk=cfg.chunk))
+    key = jax.random.fold_in(state.key, 0)
+    res = jax.block_until_ready(fill_j(state.edges, state.n_h, key))  # compile
+    t0 = time.perf_counter()
+    res = jax.block_until_ready(fill_j(state.edges, state.n_h, key))
+    t_fill = time.perf_counter() - t0
+
+    upd_j = jax.jit(lambda e, r, d: (
+        vmap_.adapt_edges(e, r.map_sums, r.map_counts, 0.5),
+        strat.adapt_nh(d, 0.75, cfg.neval)))
+    _, _, d_h = F.estimate_from_cubes(res, state.n_h)
+    jax.block_until_ready(upd_j(state.edges, res, d_h))
+    t0 = time.perf_counter()
+    jax.block_until_ready(upd_j(state.edges, res, d_h))
+    t_update = time.perf_counter() - t0
+
+    res_j = jax.jit(lambda r, nh: F.estimate_from_cubes(r, nh)[:2])
+    jax.block_until_ready(res_j(res, state.n_h))
+    t0 = time.perf_counter()
+    jax.block_until_ready(res_j(res, state.n_h))
+    t_results = time.perf_counter() - t0
+
+    total = t_init + t_fill + t_update + t_results
+    return dict(init=t_init, fill=t_fill, update=t_update, results=t_results,
+                total=total)
+
+
+def run(fast=True):
+    evals = [10**5, 10**6] if fast else [10**5, 10**6, 10**7]
+    for name, mk in [("roos_arnold", make_roos_arnold),
+                     ("ridge", lambda: make_ridge(n_peaks=1000))]:
+        ig = mk()
+        for ne in evals:
+            s = _sections(ig, ne)
+            pct = {k: 100 * v / s["total"] for k, v in s.items() if k != "total"}
+            emit(f"table1/{name}/neval={ne:.0e}/fill", s["fill"],
+                 f"fill%={pct['fill']:.1f} init%={pct['init']:.1f} "
+                 f"update%={pct['update']:.1f} results%={pct['results']:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Paper Fig. 4 / Table 7: the seven test integrands under the three
+parameter configurations (def / vf / tq): wall time vs relative standard
+error.  The paper's observation to reproduce: the 'def' configuration gives
+the best average accuracy-time tradeoff."""
+
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+
+from repro.core import run as vegas_run
+from repro.core import VegasConfig
+from repro.core.integrands import (make_cosine, make_exponential,
+                                   make_gaussian, make_linear,
+                                   make_morokoff_caflisch, make_roos_arnold,
+                                   make_sine_exp)
+from repro.configs.vegas import PAPER_CONFIGS, tq_ninc
+from .common import emit
+
+SEVEN = [make_sine_exp, make_linear, make_cosine, make_exponential,
+         make_roos_arnold, make_morokoff_caflisch, make_gaussian]
+
+
+def run(fast=True):
+    neval = 100_000 if fast else 1_000_000
+    for cname in ("def", "vf", "tq"):
+        base = PAPER_CONFIGS[cname]
+        rel_errs, times = [], []
+        for mk in SEVEN:
+            ig = mk()
+            ninc = tq_ninc(neval) if cname == "tq" else base.ninc
+            cfg = VegasConfig(neval=neval, max_it=12, skip=4, ninc=ninc,
+                              alpha=base.alpha, beta=base.beta,
+                              chunk=min(neval, 1 << 14))
+            t0 = time.perf_counter()
+            r = vegas_run(ig, cfg, key=jax.random.PRNGKey(1))
+            dt = time.perf_counter() - t0
+            rel = abs(r.sdev / r.mean) if r.mean else float("inf")
+            rel_errs.append(max(rel, 1e-12))
+            times.append(dt)
+        gm_err = math.exp(sum(math.log(e) for e in rel_errs) / len(rel_errs))
+        gm_time = math.exp(sum(math.log(t) for t in times) / len(times))
+        emit(f"table7/config={cname}", gm_time,
+             f"geomean_rel_err={gm_err:.3e} neval={neval}")
+
+
+if __name__ == "__main__":
+    run()

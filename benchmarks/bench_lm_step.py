@@ -1,0 +1,42 @@
+"""Substrate benchmark: reduced-config train-step + decode-step timing per
+assigned architecture (CPU proxy numbers; TPU performance model lives in the
+roofline table)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import transformer as T
+from repro.train import optimizer as OPT
+from repro.train.data import synthetic_batch
+from repro.train.train_step import init_state, make_train_step
+from .common import emit, timeit
+
+
+def run(fast=True):
+    archs = (["smollm_135m", "mamba2_1_3b", "phi3_5_moe_42b"]
+             if fast else configs.ARCHS)
+    for arch in archs:
+        cfg = configs.get_reduced(arch)
+        opt = OPT.for_config(cfg)
+        step = jax.jit(make_train_step(cfg, opt))
+        state = init_state(jax.random.PRNGKey(0), cfg, opt)
+        batch = synthetic_batch(0, 0, batch=4, seq=64, vocab=cfg.vocab)
+        if cfg.xattn_memory_len:
+            batch["memory"] = jnp.zeros((4, cfg.xattn_memory_len, cfg.d_model),
+                                        jnp.float32)
+        t = timeit(lambda: step(state, batch)[1]["loss"], repeats=3)
+        emit(f"lm_train_step/{arch}", t, f"tok_per_s={4*64/t:,.0f}")
+
+        cache = T.init_cache(cfg, 2, 64, dtype=jnp.float32)
+        dstep = jax.jit(lambda p, c, tok, pos: T.decode_step(p, c, tok, pos, cfg))
+        tok = jnp.zeros((2,), jnp.int32)
+        t = timeit(lambda: dstep(state["params"], cache, tok,
+                                 jnp.array(1, jnp.int32))[0], repeats=3)
+        emit(f"lm_decode_step/{arch}", t, f"tok_per_s={2/t:,.0f}")
+
+
+if __name__ == "__main__":
+    run()

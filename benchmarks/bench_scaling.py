@@ -1,0 +1,49 @@
+"""Paper Fig. 3: fill-phase scaling in (a) batch/chunk size, (b) number of
+map intervals, (c) dimensions, (d) number of evaluations.  Single-parameter
+sweeps around the paper's default operating point, on the jitted fill."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core import fill as F
+from repro.core import integrator as I
+from repro.core.integrands import make_linear
+from .common import emit, timeit
+
+
+def _fill_time(ig, neval, ninc, chunk):
+    cfg = I.VegasConfig(neval=neval, ninc=ninc,
+                        chunk=min(chunk, neval)).resolve(ig.dim)
+    st = I.init_state(ig, cfg, jax.random.PRNGKey(0))
+    f = jax.jit(functools.partial(F.fill_reference, integrand=ig,
+                                  nstrat=cfg.nstrat, n_cap=cfg.n_cap,
+                                  chunk=cfg.chunk))
+    key = jax.random.fold_in(st.key, 0)
+    return timeit(f, st.edges, st.n_h, key, repeats=3, warmup=1)
+
+
+def run(fast=True):
+    base_ne = 2 * 10**5 if fast else 2 * 10**6
+    # (a) chunk ("batch_size")
+    for chunk in (1 << 12, 1 << 14, 1 << 16):
+        t = _fill_time(make_linear(10), base_ne, 1024, chunk)
+        emit(f"fig3a/chunk={chunk}", t, f"evals_per_s={base_ne/t:,.0f}")
+    # (b) intervals
+    for ninc in (16, 256, 1024, 4096):
+        t = _fill_time(make_linear(10), base_ne, ninc, 1 << 14)
+        emit(f"fig3b/ninc={ninc}", t, f"evals_per_s={base_ne/t:,.0f}")
+    # (c) dimensions
+    for d in (2, 4, 8, 16):
+        t = _fill_time(make_linear(d), base_ne, 1024, 1 << 14)
+        emit(f"fig3c/dim={d}", t, f"evals_per_s={base_ne/t:,.0f}")
+    # (d) evaluations
+    for ne in (base_ne // 10, base_ne, base_ne * 4):
+        t = _fill_time(make_linear(10), ne, 1024, 1 << 14)
+        emit(f"fig3d/neval={ne:.0e}", t, f"evals_per_s={ne/t:,.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""Shared benchmark utilities: timing + CSV output."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit(fn, *args, repeats=3, warmup=1):
+    """Median wall time of fn(*args) in seconds (block_until_ready aware)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    """One CSV row: name,us_per_call,derived."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig8,table1,...]
+
+Prints ``name,us_per_call,derived`` CSV rows.  Default (fast) mode scales
+n_eval down so the suite completes on a single CPU core in minutes; --full
+uses paper-scale parameters.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    fast = not args.full
+    only = set(filter(None, args.only.split(",")))
+
+    from . import (bench_applications, bench_breakdown, bench_integrands,
+                   bench_lm_step, bench_multidevice, bench_scaling,
+                   bench_stratification)
+
+    suites = {
+        "table1": bench_breakdown,
+        "table7": bench_integrands,
+        "fig3": bench_scaling,
+        "fig8": bench_stratification,
+        "table8": bench_multidevice,
+        "table9_10": bench_applications,
+        "lm": bench_lm_step,
+    }
+    print("name,us_per_call,derived")
+    for key, mod in suites.items():
+        if only and key not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod.run(fast=fast)
+        except Exception as e:  # keep the harness alive per-suite
+            print(f"{key}/ERROR,0,{type(e).__name__}: {e}", file=sys.stdout)
+        print(f"{key}/_suite_wall,{(time.time()-t0)*1e6:.0f},",
+              file=sys.stdout)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Feynman path integral (paper §4.6): lattice propagator of the 1D harmonic
+oscillator <x|e^{-HT}|x> at x=0, compared against (a) the exact value of the
+lattice (Gaussian) integral and (b) the continuum propagator.
+
+  PYTHONPATH=src python examples/path_integral.py
+"""
+
+import time
+
+import jax
+
+from repro.core import VegasConfig, run
+from repro.core.integrands import make_feynman_path
+from repro.core.targets import harmonic_propagator_exact
+
+ig = make_feynman_path(n_slices=9, t_total=4.0)  # 8-dimensional integral
+cfg = VegasConfig(neval=400_000, max_it=15, skip=5, ninc=512)
+
+t0 = time.time()
+r = run(ig, cfg, key=jax.random.PRNGKey(0))
+print(f"VEGAS+ lattice estimate : {r.mean:.8g} +- {r.sdev:.2g} "
+      f"({time.time()-t0:.1f}s, chi2/dof {r.chi2_dof:.2f})")
+print(f"lattice exact (Gaussian): {ig.target:.8g}   "
+      f"pull {(r.mean - ig.target)/r.sdev:+.2f} sigma")
+print(f"continuum propagator    : {harmonic_propagator_exact(0.0, 4.0):.8g} "
+      f"(differs by O(a^2) discretization)")

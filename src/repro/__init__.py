@@ -1,0 +1,1 @@
+"""repro: multi-pod JAX framework reproducing cuVegas (VEGAS+ on TPU)."""

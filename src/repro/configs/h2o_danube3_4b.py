@@ -1,0 +1,33 @@
+"""h2o-danube-3-4b [dense]: 24L d=3840 32H (GQA kv=8) d_ff=10240 vocab=32000 —
+llama+mistral mix with sliding-window attention. [arXiv:2401.16818; unverified]
+
+SWA (window 4096) makes decode memory O(window): eligible for long_500k.
+"""
+
+from repro.models.config import ArchConfig, Block
+
+CONFIG = ArchConfig(
+    name="h2o-danube-3-4b",
+    n_layers=24,
+    d_model=3840,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=10240,
+    vocab=32000,
+    blocks=(Block("swa", "mlp"),),
+    swa_window=4096,
+    rope_theta=500_000.0,
+    optimizer="adamw",
+    fsdp=False,
+    microbatches_train_4k=2,
+    sub_quadratic=True,        # O(window) attention
+    remat_group=8,
+)
+
+
+def reduced():
+    return ArchConfig(
+        name="h2o-danube-3-4b-smoke",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=160, vocab=256,
+        blocks=CONFIG.blocks, swa_window=8,
+        params_dtype="float32", compute_dtype="float32")

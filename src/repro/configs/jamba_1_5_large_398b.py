@@ -1,0 +1,51 @@
+"""jamba-1.5-large-398b [hybrid]: 72L d=8192 64H (GQA kv=8) d_ff=24576
+vocab=65536, MoE 16e top-2 — Mamba+attn 1:7 interleave, MoE every other
+layer. [arXiv:2403.19887; hf]
+
+Period-8 block template: attention at slot 4, Mamba elsewhere; MoE on odd
+slots.  (Deviation noted in DESIGN.md: the mixer is our Mamba2/SSD block
+rather than Jamba's Mamba1; d_state=128 per our SsmConfig.)
+Hybrid => sub-quadratic long-context: the 9 attention layers use
+sequence-sharded KV for long_500k decode.
+"""
+
+from repro.models.config import ArchConfig, Block, MoeConfig, SsmConfig
+
+
+def _blocks():
+    out = []
+    for j in range(8):
+        mixer = "attn" if j == 4 else "mamba"
+        ffn = "moe" if j % 2 == 1 else "mlp"
+        out.append(Block(mixer, ffn))
+    return tuple(out)
+
+
+CONFIG = ArchConfig(
+    name="jamba-1.5-large-398b",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=24576,
+    vocab=65536,
+    blocks=_blocks(),
+    moe=MoeConfig(n_experts=16, top_k=2, d_ff=24576),
+    ssm=SsmConfig(d_state=128, expand=2, head_dim=64, conv_width=4, chunk=256),
+    optimizer="adafactor",     # 398B: Adam m/v would not fit a single pod
+    params_dtype="bfloat16",   # f32 residuals/cotangents overflow 16GB HBM
+    fsdp=True,
+    microbatches_train_4k=16,
+    sub_quadratic=True,
+    remat_group=3,
+)
+
+
+def reduced():
+    return ArchConfig(
+        name="jamba-1.5-large-398b-smoke",
+        n_layers=8, d_model=64, n_heads=4, n_kv_heads=2, d_ff=160, vocab=256,
+        blocks=_blocks(),
+        moe=MoeConfig(n_experts=4, top_k=2, d_ff=96),
+        ssm=SsmConfig(d_state=16, expand=2, head_dim=16, conv_width=4, chunk=8),
+        params_dtype="float32", compute_dtype="float32")

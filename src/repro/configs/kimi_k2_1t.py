@@ -1,0 +1,38 @@
+"""kimi-k2-1t-a32b [moe]: 61L d=7168 64H (GQA kv=8) vocab=163840,
+MoE 384 experts top-8, per-expert d_ff=2048 — trillion-param MoE
+(paper-table). [arXiv:2501.kimi2; unverified]
+
+At ~1.04T params: bf16 params + Adafactor (factored second moment) are
+required to fit 256 x 16GB chips on the single-pod mesh (DESIGN.md §5);
+f32 + Adam would need 12+ TB.
+"""
+
+from repro.models.config import ArchConfig, Block, MoeConfig
+
+CONFIG = ArchConfig(
+    name="kimi-k2-1t-a32b",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=0,
+    vocab=163840,
+    blocks=(Block("attn", "moe"),),
+    moe=MoeConfig(n_experts=384, top_k=8, d_ff=2048),
+    head_dim=112,
+    rope_theta=50_000.0,
+    optimizer="adafactor",
+    params_dtype="bfloat16",
+    fsdp=True,
+    microbatches_train_4k=8,
+    sub_quadratic=False,
+)
+
+
+def reduced():
+    return ArchConfig(
+        name="kimi-k2-smoke",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=0, vocab=512,
+        blocks=CONFIG.blocks, head_dim=16,
+        moe=MoeConfig(n_experts=8, top_k=2, d_ff=32),
+        params_dtype="float32", compute_dtype="float32")

@@ -1,0 +1,36 @@
+"""llama-3.2-vision-11b [vlm]: 40L d=4096 32H (GQA kv=8) d_ff=14336
+vocab=128256 — cross-attn image layers every 5th layer (i % 5 == 3).
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+
+Modality frontend is a STUB: input_specs() feeds precomputed patch
+embeddings (b, 576, d_model) as the cross-attention memory.
+"""
+
+from repro.models.config import ArchConfig, Block
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-11b",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=128256,
+    blocks=(Block("attn", "mlp"), Block("attn", "mlp"), Block("attn", "mlp"),
+            Block("xattn", "mlp"), Block("attn", "mlp")),
+    xattn_memory_len=576,
+    rope_theta=500_000.0,
+    optimizer="adamw",
+    fsdp=True,
+    microbatches_train_4k=4,
+    sub_quadratic=False,
+    remat_group=1,
+)
+
+
+def reduced():
+    return ArchConfig(
+        name="llama-3.2-vision-11b-smoke",
+        n_layers=5, d_model=64, n_heads=4, n_kv_heads=2, d_ff=160, vocab=256,
+        blocks=CONFIG.blocks, xattn_memory_len=12,
+        params_dtype="float32", compute_dtype="float32")

@@ -1,0 +1,32 @@
+"""mamba2-1.3b [ssm]: 48L d=2048 (attn-free) vocab=50280, ssm_state=128 —
+SSD (state-space duality). [arXiv:2405.21060; unverified]"""
+
+from repro.models.config import ArchConfig, Block, SsmConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-1.3b",
+    n_layers=48,
+    d_model=2048,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab=50280,
+    blocks=(Block("mamba", "none"),),
+    ssm=SsmConfig(d_state=128, expand=2, head_dim=64, conv_width=4, chunk=256),
+    tie_embeddings=True,
+    optimizer="adamw",
+    fsdp=False,
+    microbatches_train_4k=2,
+    sub_quadratic=True,        # O(1) decode state
+    remat_group=8,
+)
+
+
+def reduced():
+    return ArchConfig(
+        name="mamba2-1.3b-smoke",
+        n_layers=2, d_model=64, n_heads=0, n_kv_heads=0, d_ff=0, vocab=256,
+        blocks=CONFIG.blocks,
+        ssm=SsmConfig(d_state=16, expand=2, head_dim=16, conv_width=4, chunk=8),
+        tie_embeddings=True,
+        params_dtype="float32", compute_dtype="float32")

@@ -1,0 +1,29 @@
+"""mistral-large-123b [dense]: 88L d=12288 96H (GQA kv=8) d_ff=28672
+vocab=32768. [hf:mistralai/Mistral-Large-Instruct-2407; unverified]"""
+
+from repro.models.config import ArchConfig, Block
+
+CONFIG = ArchConfig(
+    name="mistral-large-123b",
+    n_layers=88,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab=32768,
+    blocks=(Block("attn", "mlp"),),
+    rope_theta=1_000_000.0,
+    optimizer="adamw",
+    fsdp=True,                 # 123B f32 + Adam does not fit TP-replicated
+    microbatches_train_4k=8,
+    sub_quadratic=False,
+    remat_group=8,
+)
+
+
+def reduced():
+    return ArchConfig(
+        name="mistral-large-123b-smoke",
+        n_layers=2, d_model=96, n_heads=6, n_kv_heads=2, d_ff=224, vocab=256,
+        blocks=CONFIG.blocks,
+        params_dtype="float32", compute_dtype="float32")

@@ -1,0 +1,33 @@
+"""musicgen-large [audio]: 48L d=2048 32H (GQA kv=32 = MHA) d_ff=8192
+vocab=2048 — decoder-only over EnCodec tokens. [arXiv:2306.05284; hf]
+
+Backbone only per the assignment: the EnCodec frontend is a stub — the model
+consumes audio-codebook token ids directly (input_specs provides them).
+"""
+
+from repro.models.config import ArchConfig, Block
+
+CONFIG = ArchConfig(
+    name="musicgen-large",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=2048,
+    blocks=(Block("attn", "mlp"),),
+    rope_theta=10_000.0,
+    optimizer="adamw",
+    fsdp=False,
+    microbatches_train_4k=4,
+    sub_quadratic=False,
+    remat_group=8,
+)
+
+
+def reduced():
+    return ArchConfig(
+        name="musicgen-large-smoke",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=160, vocab=128,
+        blocks=CONFIG.blocks,
+        params_dtype="float32", compute_dtype="float32")

@@ -1,0 +1,32 @@
+"""phi3.5-moe-42b-a6.6b [moe]: 32L d=4096 32H (GQA kv=8) d_ff=6400
+vocab=32064, MoE 16 experts top-2. [hf:microsoft/Phi-3.5-MoE-instruct; hf]"""
+
+from repro.models.config import ArchConfig, Block, MoeConfig
+
+CONFIG = ArchConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=0,
+    vocab=32064,
+    blocks=(Block("attn", "moe"),),
+    moe=MoeConfig(n_experts=16, top_k=2, d_ff=6400),
+    rope_theta=10_000.0,
+    optimizer="adamw",
+    fsdp=True,
+    microbatches_train_4k=4,
+    sub_quadratic=False,
+    remat_group=1,
+    moe_ep_over_data=False,
+)
+
+
+def reduced():
+    return ArchConfig(
+        name="phi3.5-moe-smoke",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=0, vocab=256,
+        blocks=CONFIG.blocks,
+        moe=MoeConfig(n_experts=4, top_k=2, d_ff=96),
+        params_dtype="float32", compute_dtype="float32")

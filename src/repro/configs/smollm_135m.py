@@ -1,0 +1,34 @@
+"""smollm-135m [dense]: 30L d=576 9H (GQA kv=3) d_ff=1536 vocab=49152 —
+llama-arch small, tied embeddings. [hf:HuggingFaceTB/SmolLM-135M; hf]
+
+Too small for tensor parallelism (9 heads don't split 16 ways): sharding
+policy is pure data parallelism with replicated params.
+"""
+
+from repro.models.config import ArchConfig, Block
+
+CONFIG = ArchConfig(
+    name="smollm-135m",
+    n_layers=30,
+    d_model=576,
+    n_heads=9,
+    n_kv_heads=3,
+    d_ff=1536,
+    vocab=49152,
+    blocks=(Block("attn", "mlp"),),
+    tie_embeddings=True,
+    rope_theta=10_000.0,
+    optimizer="adamw",
+    fsdp=False,
+    microbatches_train_4k=4,
+    sub_quadratic=False,
+    remat_group=1,
+)
+
+
+def reduced():
+    return ArchConfig(
+        name="smollm-135m-smoke",
+        n_layers=3, d_model=48, n_heads=3, n_kv_heads=1, d_ff=128, vocab=256,
+        blocks=CONFIG.blocks, tie_embeddings=True,
+        params_dtype="float32", compute_dtype="float32")

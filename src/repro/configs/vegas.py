@@ -1,0 +1,17 @@
+"""The paper's three parameter configurations (Table 2)."""
+
+from repro.core.integrator import VegasConfig
+
+PAPER_CONFIGS = {
+    # Configuration 1 (def): cuVegas/Vegas defaults
+    "def": VegasConfig(max_it=20, skip=0, ninc=1024, alpha=0.5, beta=0.75),
+    # Configuration 2 (vf): matches VegasFlow's hard-coded choices
+    "vf": VegasConfig(max_it=20, skip=0, ninc=50, alpha=1.5, beta=0.75),
+    # Configuration 3 (tq): matches TorchQuad (n_intervals computed on n_eval)
+    "tq": VegasConfig(max_it=20, skip=0, ninc=1024, alpha=0.5, beta=0.75),
+}
+
+
+def tq_ninc(neval: int) -> int:
+    """TorchQuad computes the interval count from n_eval."""
+    return max(2, min(1024, int((neval / 40) ** 0.5)))

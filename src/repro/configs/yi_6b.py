@@ -1,0 +1,29 @@
+"""yi-6b [dense]: 32L d=4096 32H (GQA kv=4) d_ff=11008 vocab=64000 —
+llama-arch GQA. [arXiv:2403.04652; hf]"""
+
+from repro.models.config import ArchConfig, Block
+
+CONFIG = ArchConfig(
+    name="yi-6b",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=11008,
+    vocab=64000,
+    blocks=(Block("attn", "mlp"),),
+    rope_theta=5_000_000.0,
+    optimizer="adamw",
+    fsdp=False,
+    microbatches_train_4k=2,
+    sub_quadratic=False,
+    remat_group=8,
+)
+
+
+def reduced():
+    return ArchConfig(
+        name="yi-6b-smoke",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=160, vocab=256,
+        blocks=CONFIG.blocks,
+        params_dtype="float32", compute_dtype="float32")

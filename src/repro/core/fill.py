@@ -1,0 +1,129 @@
+"""The fill phase: sample -> transform -> evaluate -> accumulate.
+
+This is cuVegas' ``vegasFill`` (Alg. 2) — the kernel that dominates runtime
+(paper Table 1: 36-99% of total).  The decomposition is the paper's C1:
+a flat axis of ``n_cap`` evaluations, each knowing its hypercube, processed
+in fixed-size batches so the work per lane is identical (no divergence).
+
+Three interchangeable backends with one contract:
+  * ``ref``    — pure jnp oracle (scatter-add accumulation),
+  * ``pallas`` — the TPU kernel (kernels/vegas_fill.py) for transform + eval +
+                 MXU one-hot map accumulation; cube reduction via segment-sum,
+  * both are chunked with ``lax.scan`` so the live working set stays bounded
+    (the TPU analogue of the paper's batch_size knob).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import map as vmap_
+from . import strat
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FillResult:
+    """Accumulators produced by one fill pass (paper's map/cube weights)."""
+    map_sums: jax.Array    # (d, ninc)   sum of (J f)^2 per map interval
+    map_counts: jax.Array  # (d, ninc)   number of samples per map interval
+    cube_s1: jax.Array     # (n_cubes,)  sum of J f per hypercube
+    cube_s2: jax.Array     # (n_cubes,)  sum of (J f)^2 per hypercube
+
+    def tree_flatten(self):
+        return (self.map_sums, self.map_counts, self.cube_s1, self.cube_s2), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def __add__(self, other):
+        return FillResult(self.map_sums + other.map_sums,
+                          self.map_counts + other.map_counts,
+                          self.cube_s1 + other.cube_s1,
+                          self.cube_s2 + other.cube_s2)
+
+
+def _eval_chunk(edges, cube, u, integrand, nstrat, n_cubes):
+    """Transform + evaluate one chunk. Returns (w, iy, valid)."""
+    valid = cube < n_cubes
+    y = strat.stratified_y(jnp.minimum(cube, n_cubes - 1), u, nstrat)
+    x, jac, iy = vmap_.apply_map(edges, y)
+    fx = integrand(x)
+    w = jnp.where(valid, jac * fx, 0.0)
+    return w, iy, valid
+
+
+def fill_reference(edges, n_h, key, integrand, *, nstrat: int, n_cap: int,
+                   chunk: int, dtype=jnp.float32, start_chunk=0,
+                   n_chunks: int | None = None) -> FillResult:
+    """Pure-jnp fill, scanned in chunks of the *global* eval axis.
+
+    ``start_chunk``/``n_chunks`` select a contiguous chunk range — the unit of
+    distribution.  The RNG is keyed by the GLOBAL chunk index, so the stream a
+    shard produces is a pure function of (key, chunk id): any device can
+    (re)compute any shard — the basis for elastic scaling and straggler
+    re-dispatch (DESIGN.md C5/D3).
+    """
+    dim = edges.shape[0]
+    ninc = edges.shape[1] - 1
+    n_cubes = n_h.shape[0]
+    assert n_cap % chunk == 0, (n_cap, chunk)
+    if n_chunks is None:
+        n_chunks = n_cap // chunk
+
+    def body(acc, step):
+        gchunk = start_chunk + step
+        k = jax.random.fold_in(key, gchunk)
+        u = jax.random.uniform(k, (chunk, dim), dtype=dtype)
+        cube = strat.cubes_for_slice(n_h, gchunk * chunk, chunk)
+        w, iy, valid = _eval_chunk(edges, cube, u, integrand, nstrat, n_cubes)
+        w2 = w * w
+        cnt = valid.astype(dtype)
+        ms, mc = vmap_.accumulate_map_weights(iy, w2, cnt, ninc)
+        # Overflow bucket (id n_cubes) catches masked evals; dropped below.
+        s1 = jnp.zeros((n_cubes + 1,), dtype).at[cube].add(w)
+        s2 = jnp.zeros((n_cubes + 1,), dtype).at[cube].add(w2)
+        return acc + FillResult(ms, mc, s1[:n_cubes], s2[:n_cubes]), None
+
+    zero = FillResult(jnp.zeros((dim, ninc), dtype), jnp.zeros((dim, ninc), dtype),
+                      jnp.zeros((n_cubes,), dtype), jnp.zeros((n_cubes,), dtype))
+    acc, _ = jax.lax.scan(body, zero, jnp.arange(n_chunks))
+    return acc
+
+
+def fill_pallas(edges, n_h, key, integrand, *, nstrat: int, n_cap: int,
+                chunk: int, dtype=jnp.float32, interpret: bool = True,
+                fused_cubes: bool = False) -> FillResult:
+    """Pallas-kernel fill: transform/eval/map-hist inside the kernel."""
+    from repro.kernels import ops as kops
+    return kops.fill(edges, n_h, key, integrand, nstrat=nstrat, n_cap=n_cap,
+                     chunk=chunk, dtype=dtype, interpret=interpret,
+                     fused_cubes=fused_cubes)
+
+
+BACKENDS = {"ref": fill_reference, "pallas": fill_pallas}
+
+
+def estimate_from_cubes(res: FillResult, n_h: jax.Array):
+    """Iteration estimate + variance + stratification signal (eq. (5)-(7)).
+
+    Each cube has y-volume v = 1/n_cubes; I_h = v * mean(Jf), and the variance
+    of the cube mean is v^2 (E[w^2]-E[w]^2)/(n_h-1).
+    Returns (I_it, sigma2_it, d_h) with d_h = per-cube sample sigma — the
+    allocation signal n_h ∝ d_h^beta ("n_h proportional to sigma_h(Jf)").
+    """
+    n_cubes = n_h.shape[0]
+    nh = jnp.maximum(n_h.astype(res.cube_s1.dtype), 1.0)
+    v = 1.0 / n_cubes
+    m = res.cube_s1 / nh
+    q = res.cube_s2 / nh
+    var = jnp.maximum(q - m * m, 0.0)
+    i_it = v * jnp.sum(m)
+    sigma2 = v * v * jnp.sum(var / jnp.maximum(nh - 1.0, 1.0))
+    d_h = jnp.sqrt(var)
+    return i_it, sigma2, d_h

@@ -1,0 +1,189 @@
+"""VEGAS+ driver: iterate fill -> adapt -> aggregate (paper Alg. 1).
+
+The whole iteration (fill, stratification update, map update, estimate) is a
+single jitted program — the JAX realization of cuVegas' "everything stays on
+device" design (C4/C6): there are no host transfers inside an iteration, and
+XLA overlaps the map update with result aggregation (the paper used two CUDA
+streams for this).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import fill as fill_mod
+from . import map as vmap_
+from . import strat
+from .integrands import Integrand
+
+
+@dataclasses.dataclass(frozen=True)
+class VegasConfig:
+    """Algorithm parameters (paper Table 2 names where they exist)."""
+    neval: int = 100_000          # target integrand evaluations / iteration
+    max_it: int = 20              # max_it
+    skip: int = 0                 # iterations excluded from the final combine
+    ninc: int = 1024              # n_intervals of the importance map
+    alpha: float = 0.5            # importance-map damping
+    beta: float = 0.75            # stratification damping (0 => classic VEGAS)
+    nstrat: int | None = None     # stratifications/dim (None => heuristic)
+    max_cubes: int = 1 << 18      # cap on nstrat**d
+    chunk: int = 16_384           # evals per scanned chunk (batch_size analog)
+    dtype: str = "float32"
+    backend: str = "ref"          # 'ref' | 'pallas'
+    interpret: bool = True        # pallas interpret mode (CPU validation)
+    fused_cubes: bool = False     # in-kernel cube accumulation (perf iteration)
+
+    def resolve(self, dim: int) -> "ResolvedConfig":
+        ns = self.nstrat or strat.choose_nstrat(self.neval, dim, self.max_cubes)
+        n_cubes = ns**dim
+        n_cap = strat.eval_capacity(self.neval, n_cubes)
+        chunk = min(self.chunk, max(n_cap, 256))
+        n_cap = ((n_cap + chunk - 1) // chunk) * chunk  # pad to chunk multiple
+        return ResolvedConfig(self, dim, ns, n_cubes, n_cap, chunk)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedConfig:
+    base: VegasConfig
+    dim: int
+    nstrat: int
+    n_cubes: int
+    n_cap: int
+    chunk: int
+
+    def __getattr__(self, name):
+        return getattr(self.base, name)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class VegasState:
+    """Everything the algorithm carries across iterations. O(KB): this is the
+    checkpoint payload for fault-tolerant runs (DESIGN.md §5)."""
+    edges: jax.Array      # (d, ninc+1) importance map
+    n_h: jax.Array        # (n_cubes,) evals per hypercube
+    key: jax.Array        # base PRNG key
+    it: jax.Array         # iteration counter
+    results: jax.Array    # (max_it, 2): per-iteration (I_i, sigma2_i)
+
+    def tree_flatten(self):
+        return (self.edges, self.n_h, self.key, self.it, self.results), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@dataclasses.dataclass(frozen=True)
+class VegasResult:
+    mean: float
+    sdev: float
+    chi2_dof: float
+    n_it: int
+    iter_means: jax.Array
+    iter_sdevs: jax.Array
+    state: VegasState
+
+    def __repr__(self):
+        return (f"VegasResult(mean={self.mean:.8g}, sdev={self.sdev:.3g}, "
+                f"chi2/dof={self.chi2_dof:.2f}, n_it={self.n_it})")
+
+
+def init_state(integrand: Integrand, cfg: ResolvedConfig, key) -> VegasState:
+    dtype = jnp.dtype(cfg.dtype)
+    edges = vmap_.uniform_edges(integrand.lower, integrand.upper, cfg.ninc, dtype)
+    n_h = strat.uniform_nh(cfg.neval, cfg.n_cubes)
+    results = jnp.stack([jnp.zeros((cfg.max_it,), dtype),
+                         jnp.full((cfg.max_it,), jnp.inf, dtype)], axis=1)
+    return VegasState(edges, n_h, key, jnp.zeros((), jnp.int32), results)
+
+
+def iteration_step(state: VegasState, integrand: Integrand,
+                   cfg: ResolvedConfig, fill_fn=None) -> VegasState:
+    """One VEGAS+ iteration. ``fill_fn`` lets dist/sharded_fill.py substitute
+    the multi-device fill while reusing adaptation/aggregation unchanged."""
+    dtype = jnp.dtype(cfg.dtype)
+    key_it = jax.random.fold_in(state.key, state.it)
+    if fill_fn is None:
+        fill_fn = functools.partial(
+            fill_mod.BACKENDS[cfg.backend], nstrat=cfg.nstrat, n_cap=cfg.n_cap,
+            chunk=cfg.chunk, dtype=dtype,
+            **({"interpret": cfg.interpret, "fused_cubes": cfg.fused_cubes}
+               if cfg.backend == "pallas" else {}))
+    res = fill_fn(state.edges, state.n_h, key_it, integrand)
+
+    i_it, sigma2_it, d_h = fill_mod.estimate_from_cubes(res, state.n_h)
+    results = state.results.at[state.it].set(
+        jnp.stack([i_it.astype(dtype), sigma2_it.astype(dtype)]))
+
+    # Adaptive stratification (the "+" of VEGAS+); beta=0 freezes n_h uniform.
+    n_h = (strat.adapt_nh(d_h, cfg.beta, cfg.neval)
+           if cfg.beta > 0 else state.n_h)
+    # Importance-map adaptation; alpha=0 freezes the map.
+    edges = (vmap_.adapt_edges(state.edges, res.map_sums, res.map_counts, cfg.alpha)
+             if cfg.alpha > 0 else state.edges)
+    return VegasState(edges, n_h, state.key, state.it + 1, results)
+
+
+def combine_results(results: jax.Array, skip: int, n_done: int):
+    """Inverse-variance weighted combination across iterations (eq. (8)-(9))
+    plus the chi^2/dof consistency diagnostic vegas reports."""
+    means, sig2 = results[:, 0], results[:, 1]
+    idx = jnp.arange(results.shape[0])
+    use = (idx >= skip) & (idx < n_done) & jnp.isfinite(sig2) & (sig2 > 0)
+    wts = jnp.where(use, 1.0 / jnp.where(use, sig2, 1.0), 0.0)
+    wsum = jnp.sum(wts)
+    mean = jnp.sum(wts * means) / wsum
+    var = 1.0 / wsum
+    n_used = jnp.sum(use)
+    chi2 = jnp.sum(jnp.where(use, wts * (means - mean) ** 2, 0.0))
+    chi2_dof = chi2 / jnp.maximum(n_used - 1, 1)
+    return mean, jnp.sqrt(var), chi2_dof, n_used
+
+
+def run(integrand: Integrand, cfg: VegasConfig | None = None, *,
+        key=None, fill_fn=None, state: VegasState | None = None,
+        checkpoint_cb: Callable[[int, VegasState], None] | None = None) -> VegasResult:
+    """Run VEGAS+ to completion (or resume from ``state``).
+
+    ``checkpoint_cb(it, state)`` is invoked after every iteration; see
+    dist/checkpoint.py for the fault-tolerance wiring.
+    """
+    cfg = (cfg or VegasConfig()).resolve(integrand.dim)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if state is None:
+        state = init_state(integrand, cfg, key)
+    # The jitted step donates its input state; work on a copy so the caller's
+    # key / checkpointed state stay alive (resume safety).
+    state = jax.tree.map(jnp.copy, state)
+    if state.results.shape[0] < cfg.max_it:
+        # Resuming under a config with more iterations: grow the buffer.
+        pad = cfg.max_it - state.results.shape[0]
+        filler = jnp.stack([jnp.zeros((pad,), state.results.dtype),
+                            jnp.full((pad,), jnp.inf, state.results.dtype)], 1)
+        state = VegasState(state.edges, state.n_h, state.key, state.it,
+                           jnp.concatenate([state.results, filler]))
+
+    step = jax.jit(functools.partial(
+        iteration_step, integrand=integrand, cfg=cfg, fill_fn=fill_fn),
+        donate_argnums=0)
+
+    start = int(state.it)
+    for it in range(start, cfg.max_it):
+        state = step(state)
+        if checkpoint_cb is not None:
+            jax.block_until_ready(state.results)
+            checkpoint_cb(it, state)
+
+    mean, sdev, chi2_dof, n_used = combine_results(state.results, cfg.skip,
+                                                   int(state.it))
+    means, sig2 = state.results[:, 0], state.results[:, 1]
+    return VegasResult(float(mean), float(sdev), float(chi2_dof), int(n_used),
+                       means[: int(state.it)], jnp.sqrt(sig2[: int(state.it)]),
+                       state)

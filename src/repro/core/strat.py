@@ -1,0 +1,83 @@
+"""Adaptive stratified sampling (the "+" in VEGAS+).
+
+y-space [0,1)^d is cut into ``nstrat`` equal slices per dimension (a grid of
+``nstrat**d`` hypercubes).  Each cube h receives ``n_h`` integrand evaluations,
+re-allocated every iteration proportionally to ``d_h**beta`` where d_h is the
+cube's variance contribution (paper eq. (5)-(7)).
+
+Shapes must stay static under jit, so the eval axis has a fixed capacity
+``n_cap`` and iterations that need fewer evals mask the tail (DESIGN.md C2):
+``mapEvalsToCubes`` is a searchsorted over ``cumsum(n_h)`` and out-of-range
+evals get cube id ``n_cubes`` (an overflow bucket that is dropped).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def choose_nstrat(neval: int, dim: int, max_cubes: int = 1 << 20) -> int:
+    """vegas' heuristic: ~(neval/2)^(1/dim) slices/dim, capped by max_cubes."""
+    ns = int(math.floor((neval / 2.0) ** (1.0 / dim)))
+    ns = max(ns, 1)
+    while ns > 1 and ns**dim > max_cubes:
+        ns -= 1
+    return ns
+
+
+def eval_capacity(neval: int, n_cubes: int) -> int:
+    """Static eval-axis capacity: every cube is guaranteed >= 2 evals, so the
+    adapted totals can exceed neval by at most 2 per cube."""
+    return neval + 2 * n_cubes
+
+
+def uniform_nh(neval: int, n_cubes: int) -> jax.Array:
+    """Classic-VEGAS / m-CUBES allocation: equal evals per cube (beta = 0)."""
+    base = max(neval // n_cubes, 2)
+    return jnp.full((n_cubes,), base, dtype=jnp.int32)
+
+
+def map_evals_to_cubes(n_h: jax.Array, n_cap: int):
+    """cuVegas' mapEvalsToCubes, vectorized.
+
+    Returns ``(cube (n_cap,) int32, n_used scalar)``. Evals past the active
+    total get cube id ``n_cubes`` (overflow bucket).
+    """
+    cum = jnp.cumsum(n_h)
+    e = jnp.arange(n_cap, dtype=cum.dtype)
+    cube = jnp.searchsorted(cum, e, side="right").astype(jnp.int32)
+    return cube, cum[-1]
+
+
+def cubes_for_slice(n_h: jax.Array, start, length: int):
+    """Cube ids for a contiguous slice [start, start+length) of the *global*
+    eval axis. ``start`` may be traced (shard-local offsets under shard_map);
+    evals past the active total get the overflow id ``n_cubes``."""
+    cum = jnp.cumsum(n_h)
+    e = start + jnp.arange(length, dtype=cum.dtype)
+    return jnp.searchsorted(cum, e, side="right").astype(jnp.int32)
+
+
+def cube_coords(cube: jax.Array, nstrat: int, dim: int) -> jax.Array:
+    """Decode cube ids (n,) into per-dimension stratification coords (n, dim)."""
+    pows = nstrat ** jnp.arange(dim, dtype=jnp.int64 if nstrat**dim > 2**31 else jnp.int32)
+    return (cube[:, None] // pows[None, :]) % nstrat
+
+
+def stratified_y(cube: jax.Array, u: jax.Array, nstrat: int) -> jax.Array:
+    """Uniform u (n, d) -> stratified y (n, d): offset into the cube's cell."""
+    coords = cube_coords(cube, nstrat, u.shape[1]).astype(u.dtype)
+    return (coords + u) / nstrat
+
+
+def adapt_nh(d_h: jax.Array, beta, neval: int, n_min: int = 2) -> jax.Array:
+    """Re-allocate evals per cube: n_h = max(n_min, floor(neval * p_h)) with
+    p_h = d_h^beta / sum d_h^beta (paper's damped stratification update)."""
+    d_h = jnp.maximum(d_h, 0.0)
+    p = d_h ** beta
+    tot = jnp.sum(p)
+    p = jnp.where(tot > 0, p / jnp.maximum(tot, 1e-30), 1.0 / d_h.shape[0])
+    return jnp.maximum(jnp.floor(neval * p), n_min).astype(jnp.int32)

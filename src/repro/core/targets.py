@@ -1,0 +1,36 @@
+"""Closed-form validation targets for the application integrands."""
+
+from __future__ import annotations
+
+import math
+
+
+def _norm_cdf(x: float) -> float:
+    return 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
+
+
+def asian_geometric_closed_form(s0: float, strike: float, r: float,
+                                sigma: float, t_mat: float, n: int) -> float:
+    """Exact price of a discretely-monitored geometric-average Asian call.
+
+    G = s0 * exp(mean_k log S_k) is lognormal with
+      mu_G  = log s0 + (r - sigma^2/2) * dt * (n+1)/2
+      var_G = sigma^2 * dt * (n+1)(2n+1)/(6n)
+    where dt = T/n; then price = e^{-rT} (e^{mu+var/2} N(d1) - K N(d2)).
+    """
+    dt = t_mat / n
+    mu = math.log(s0) + (r - 0.5 * sigma**2) * dt * (n + 1) / 2.0
+    var = sigma**2 * dt * (n + 1) * (2 * n + 1) / (6.0 * n)
+    sd = math.sqrt(var)
+    d1 = (mu - math.log(strike) + var) / sd
+    d2 = d1 - sd
+    fwd = math.exp(mu + 0.5 * var)
+    return math.exp(-r * t_mat) * (fwd * _norm_cdf(d1) - strike * _norm_cdf(d2))
+
+
+def harmonic_propagator_exact(x: float, t_total: float) -> float:
+    """Continuum <x|e^{-HT}|x> for the 1D harmonic oscillator (m=w=1):
+    sqrt(1/(2 pi sinh T)) exp(-x^2 tanh(T/2)). Reference only — the lattice
+    integral converges to this as N -> inf."""
+    return math.sqrt(1.0 / (2.0 * math.pi * math.sinh(t_total))) * \
+        math.exp(-x * x * math.tanh(t_total / 2.0))

@@ -1,0 +1,58 @@
+"""Jitted wrapper exposing the Pallas fill kernel behind the core FillResult
+contract (core/fill.py BACKENDS['pallas'])."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import strat
+from . import vegas_fill as vk
+
+
+def fill(edges, n_h, key, integrand, *, nstrat: int, n_cap: int, chunk: int,
+         dtype=jnp.float32, interpret: bool = True, fused_cubes: bool = False,
+         tile: int = 256, start_chunk=0, n_chunks: int | None = None):
+    """Kernel-backed fill pass returning core.fill.FillResult.
+
+    Baseline decomposition (paper-faithful): the kernel produces per-eval
+    weights + the importance-map histogram; the per-cube reduction runs as an
+    XLA segment-sum over the (sorted) cube ids. ``fused_cubes`` switches to
+    in-kernel cube accumulation (perf iteration P-V3).
+
+    RNG follows the same global-chunk contract as core.fill.fill_reference:
+    uniforms for global chunk g are uniform(fold_in(key, g)) — elastic across
+    any device count.
+    """
+    from repro.core.fill import FillResult
+
+    del fused_cubes  # P-V3; baseline path below
+    d = edges.shape[0]
+    ninc = edges.shape[1] - 1
+    n_cubes = n_h.shape[0]
+    assert chunk % tile == 0 or chunk < tile, (chunk, tile)
+    if n_chunks is None:
+        assert n_cap % chunk == 0, (n_cap, chunk)
+        n_chunks = n_cap // chunk
+    n_local = n_chunks * chunk
+    tile = min(tile, n_local)
+
+    gchunks = start_chunk + jnp.arange(n_chunks)
+    keys = jax.vmap(lambda g: jax.random.fold_in(key, g))(gchunks)
+    u = jax.vmap(lambda k: jax.random.uniform(k, (chunk, d), dtype=dtype))(keys)
+    u = u.reshape(n_local, d)
+    cube = strat.cubes_for_slice(n_h, start_chunk * chunk, n_local)
+
+    edges_lo = edges[:, :-1].astype(dtype)
+    widths = jnp.diff(edges, axis=1).astype(dtype)
+
+    w, ms, mc = vk.vegas_fill(u, cube.reshape(n_local, 1), edges_lo, widths,
+                              nstrat=nstrat, n_cubes=n_cubes,
+                              integrand=integrand, tile=tile,
+                              interpret=interpret)
+    w = w.reshape(n_local)
+    # Per-cube reduction outside the kernel (cube ids are sorted; XLA lowers
+    # this to an efficient sorted-scatter on TPU).
+    s1 = jnp.zeros((n_cubes + 1,), dtype).at[cube].add(w)[:n_cubes]
+    s2 = jnp.zeros((n_cubes + 1,), dtype).at[cube].add(w * w)[:n_cubes]
+    return FillResult(ms, mc, s1, s2)

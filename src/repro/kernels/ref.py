@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for the vegas_fill Pallas kernel.
+
+Mirrors the kernel contract EXACTLY (same inputs, same outputs, same masking
+semantics); tests assert_allclose kernel-vs-ref across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vegas_fill_ref(u, cube, edges_lo, widths, *, nstrat: int, n_cubes: int,
+                   integrand):
+    """Oracle for one fill pass.
+
+    Args:
+      u:        (n, d) uniforms in [0, 1).
+      cube:     (n, 1) int32 hypercube ids; id == n_cubes marks a masked eval.
+      edges_lo: (d, ninc) left edge of each map interval.
+      widths:   (d, ninc) width of each map interval (> 0).
+      nstrat:   stratifications per dimension.
+      n_cubes:  number of hypercubes (= nstrat**d).
+      integrand: batched f(x (n, d)) -> (n,).
+
+    Returns:
+      w          (n, 1)  J*f per eval (0 for masked evals),
+      map_sums   (d, ninc) sum of w^2 per (dim, interval),
+      map_counts (d, ninc) number of live evals per (dim, interval).
+    """
+    n, d = u.shape
+    ninc = edges_lo.shape[1]
+    dtype = u.dtype
+    cube = cube.reshape(n)
+    valid = cube < n_cubes
+    cube_c = jnp.minimum(cube, n_cubes - 1)
+
+    pows = (nstrat ** jnp.arange(d)).astype(jnp.int32)
+    coords = ((cube_c[:, None] // pows[None, :]) % nstrat).astype(dtype)
+    y = (coords + u) / nstrat
+    yn = y * ninc
+    iy = jnp.clip(yn.astype(jnp.int32), 0, ninc - 1)
+    frac = yn - iy
+
+    e_lo = jnp.take_along_axis(edges_lo.T, iy, axis=0, mode="clip")
+    dx = jnp.take_along_axis(widths.T, iy, axis=0, mode="clip")
+    x = e_lo + frac * dx
+    logjac = jnp.sum(jnp.log(jnp.maximum(ninc * dx, 1e-30)), axis=-1)
+    jac = jnp.exp(logjac)
+
+    fx = integrand(x)
+    w = jnp.where(valid, jac * fx, jnp.zeros((), dtype))
+    w2 = w * w
+    cnt = valid.astype(dtype)
+
+    # Map histogram: the contraction onehot(iy)^T @ {w2, cnt} per dimension.
+    flat = (jnp.arange(d, dtype=jnp.int32)[None, :] * ninc + iy).reshape(-1)
+    ms = jnp.zeros((d * ninc,), dtype).at[flat].add(
+        jnp.broadcast_to(w2[:, None], (n, d)).reshape(-1)).reshape(d, ninc)
+    mc = jnp.zeros((d * ninc,), dtype).at[flat].add(
+        jnp.broadcast_to(cnt[:, None], (n, d)).reshape(-1)).reshape(d, ninc)
+    return w.reshape(n, 1), ms, mc

@@ -1,0 +1,133 @@
+"""Pallas TPU kernel for the VEGAS+ fill phase (cuVegas' ``vegasFill``).
+
+One kernel fuses, per VMEM tile of evaluations:
+  stratified-sample decode -> map transform + Jacobian -> integrand eval
+  -> importance-map weight accumulation.
+
+TPU adaptation of the CUDA design (DESIGN.md D1-D4):
+  * cuVegas' per-thread ``atomicAdd`` into the (d, ninc) map histogram becomes
+    a one-hot matmul on the MXU: ``onehot(iy_k)^T @ w2`` per dimension.  The
+    Pallas grid is sequential on TPU, so ``ms_ref[...] +=`` across tiles is
+    race-free by construction — no atomics exist and none are needed.
+  * The same one-hot matrix implements the edge/width *gathers* (table
+    lookups as (tile, ninc) @ (ninc, 1) matvecs) — random HBM access in the
+    CUDA kernel becomes dense VMEM-resident MXU work.
+  * The Jacobian is accumulated in log space (overflow-safe for adapted
+    high-d maps).
+  * The integrand is a traced JAX callable inlined into the kernel body — the
+    JAX analogue of cuVegas' Numba-compiled PTX device function.
+
+Block layout per grid step i (grid = n // tile):
+  u      (tile, d)   VMEM   uniforms for this tile
+  cube   (tile, 1)   VMEM   int32 hypercube ids (n_cubes == masked)
+  edges  (d, ninc)   VMEM   left interval edges (replicated across steps)
+  widths (d, ninc)   VMEM   interval widths     (replicated across steps)
+  w      (tile, 1)   VMEM   per-eval J*f output
+  ms/mc  (d, ninc)   VMEM   accumulated across the sequential grid
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_TINY = 1e-30
+
+
+def _fill_kernel(u_ref, cube_ref, edges_ref, widths_ref, w_ref, ms_ref, mc_ref,
+                 *, nstrat: int, n_cubes: int, ninc: int, integrand):
+    i = pl.program_id(0)
+    u = u_ref[...]                      # (tile, d)
+    cube = cube_ref[...]                # (tile, 1) int32
+    tile, d = u.shape
+    dtype = u.dtype
+
+    valid = cube < n_cubes              # (tile, 1)
+    cube_c = jnp.minimum(cube, n_cubes - 1)
+
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, ninc), 1)   # (1, ninc)
+
+    # ---- pass 1: per-dimension transform (gathers as one-hot matvecs) ----
+    x_cols = []
+    iy_cols = []
+    logjac = jnp.zeros((tile, 1), dtype)
+    for k in range(d):
+        c_k = (cube_c // (nstrat**k)) % nstrat                  # (tile, 1)
+        y_k = (c_k.astype(dtype) + u[:, k:k + 1]) / nstrat
+        yn = y_k * ninc
+        iy_k = jnp.clip(yn.astype(jnp.int32), 0, ninc - 1)      # (tile, 1)
+        frac = yn - iy_k.astype(dtype)
+        oh = (iy_k == lanes).astype(dtype)                      # (tile, ninc)
+        e_lo = jax.lax.dot_general(
+            oh, edges_ref[k:k + 1, :], (((1,), (1,)), ((), ())),
+            preferred_element_type=dtype)                       # (tile, 1)
+        dx = jax.lax.dot_general(
+            oh, widths_ref[k:k + 1, :], (((1,), (1,)), ((), ())),
+            preferred_element_type=dtype)                       # (tile, 1)
+        x_cols.append(e_lo + frac * dx)
+        iy_cols.append(iy_k)
+        logjac = logjac + jnp.log(jnp.maximum(ninc * dx, _TINY))
+
+    x = jnp.concatenate(x_cols, axis=1)                         # (tile, d)
+    jac = jnp.exp(logjac)                                       # (tile, 1)
+
+    # ---- integrand evaluation (traced into the kernel) ----
+    fx = integrand(x).reshape(tile, 1).astype(dtype)
+    w = jnp.where(valid, jac * fx, jnp.zeros((), dtype))        # (tile, 1)
+    w_ref[...] = w
+    w2 = w * w
+    cnt = valid.astype(dtype)
+
+    # ---- pass 2: map-histogram accumulation (MXU one-hot contractions) ----
+    @pl.when(i == 0)
+    def _init():
+        ms_ref[...] = jnp.zeros_like(ms_ref)
+        mc_ref[...] = jnp.zeros_like(mc_ref)
+
+    for k in range(d):
+        oh = (iy_cols[k] == lanes).astype(dtype)                # (tile, ninc)
+        ms_k = jax.lax.dot_general(
+            w2, oh, (((0,), (0,)), ((), ())),
+            preferred_element_type=dtype)                       # (1, ninc)
+        mc_k = jax.lax.dot_general(
+            cnt, oh, (((0,), (0,)), ((), ())),
+            preferred_element_type=dtype)                       # (1, ninc)
+        ms_ref[k:k + 1, :] += ms_k
+        mc_ref[k:k + 1, :] += mc_k
+
+
+def vegas_fill(u, cube, edges_lo, widths, *, nstrat: int, n_cubes: int,
+               integrand, tile: int = 256, interpret: bool = True):
+    """pallas_call wrapper. Shapes as in kernels/ref.py; ``n % tile == 0``."""
+    n, d = u.shape
+    ninc = edges_lo.shape[1]
+    assert n % tile == 0, (n, tile)
+    dtype = u.dtype
+
+    kernel = functools.partial(_fill_kernel, nstrat=nstrat, n_cubes=n_cubes,
+                               ninc=ninc, integrand=integrand)
+    grid = (n // tile,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),      # u
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),      # cube
+            pl.BlockSpec((d, ninc), lambda i: (0, 0)),      # edges_lo
+            pl.BlockSpec((d, ninc), lambda i: (0, 0)),      # widths
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),      # w
+            pl.BlockSpec((d, ninc), lambda i: (0, 0)),      # map sums
+            pl.BlockSpec((d, ninc), lambda i: (0, 0)),      # map counts
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), dtype),
+            jax.ShapeDtypeStruct((d, ninc), dtype),
+            jax.ShapeDtypeStruct((d, ninc), dtype),
+        ],
+        interpret=interpret,
+    )(u, cube, edges_lo, widths)

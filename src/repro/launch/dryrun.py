@@ -1,0 +1,323 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import/init: jax locks the device count on first use.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against 512 placeholder host devices, and extract the roofline
+terms (HLO FLOPs/bytes from cost_analysis, collective bytes parsed from the
+post-SPMD optimized HLO).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out results.json]
+  python -m repro.launch.dryrun --vegas            # the paper's own engine
+
+Results are appended (resumably) to launch_results/dryrun.json.
+"""
+
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch.mesh import make_production_mesh, dp_axes
+from repro.models import sharding as SH
+from repro.models import transformer as T
+from repro.train import optimizer as OPT
+from repro.train.train_step import make_train_step, init_state
+from repro.serve.decode import serve_step
+
+SHAPES = {
+    "train_4k":   dict(kind="train",   seq=4096,    batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768,   batch=32),
+    "decode_32k": dict(kind="decode",  seq=32768,   batch=128),
+    "long_500k":  dict(kind="long",    seq=524288,  batch=1),
+}
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "launch_results", "dryrun.json")
+
+
+# ----------------------------------------------------------- input specs ----
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def input_specs(arch: str, shape: str, mesh):
+    """ShapeDtypeStruct stand-ins for every model input of this cell:
+    weak-type-correct, shardable, no device allocation."""
+    cfg = configs.get(arch)
+    info = SHAPES[shape]
+    dp = dp_axes(mesh)
+    b, s = info["batch"], info["seq"]
+    out = {"tokens": _sds((b, s), jnp.int32, mesh, P(dp, None))}
+    if info["kind"] == "train":
+        out["labels"] = _sds((b, s), jnp.int32, mesh, P(dp, None))
+    if cfg.xattn_memory_len and info["kind"] in ("train", "prefill"):
+        out["memory"] = _sds((b, cfg.xattn_memory_len, cfg.d_model),
+                             jnp.dtype(cfg.compute_dtype), mesh, P(dp, None, None))
+    return out
+
+
+def _tree_sds(tree_shapes, tree_specs, mesh):
+    tree_specs = SH.sanitize_specs(tree_specs, tree_shapes, mesh)
+    return jax.tree.map(
+        lambda sh, sp: _sds(sh.shape, sh.dtype, mesh, sp),
+        tree_shapes, tree_specs,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)))
+
+
+def build_cell(arch: str, shape: str, mesh):
+    """Returns (fn, args_sds) ready for jax.jit(fn).lower(*args_sds)."""
+    cfg = configs.get(arch)
+    info = SHAPES[shape]
+    dp = dp_axes(mesh)
+    kind = info["kind"]
+    b, s = info["batch"], info["seq"]
+
+    if kind == "long" and not cfg.sub_quadratic:
+        raise ValueError("skip")
+    SH.set_mesh_context(mesh, dp_axes=dp)
+
+    pspecs = SH.param_specs(cfg)
+    pshapes = jax.eval_shape(lambda k: T.init_params(k, cfg),
+                             jax.random.PRNGKey(0))
+    params_sds = _tree_sds(pshapes, pspecs, mesh)
+
+    if kind == "train":
+        opt = OPT.for_config(cfg)
+        ospecs = (SH.opt_specs_adafactor(pspecs, pshapes)
+                  if cfg.optimizer == "adafactor" else SH.opt_specs_adam(pspecs))
+        oshapes = jax.eval_shape(
+            lambda ps: opt.init(ps), pshapes)
+        opt_sds = _tree_sds(oshapes, ospecs, mesh)
+        batch_sds = input_specs(arch, shape, mesh)
+        step = make_train_step(cfg, opt, n_micro=cfg.microbatches_train_4k,
+                               mesh=mesh, dp_axes=dp,
+                               param_specs=SH.sanitize_specs(pspecs, pshapes,
+                                                             mesh))
+        fn = lambda state, batch: step(state, batch)
+        return fn, ({"params": params_sds, "opt": opt_sds}, batch_sds)
+
+    if kind == "prefill":
+        ins = input_specs(arch, shape, mesh)
+        mem = ins.get("memory")
+
+        def fn(params, tokens, memory=None):
+            return T.prefill(params, tokens, cfg, cache_len=s, memory=memory)
+        if mem is not None:
+            return fn, (params_sds, ins["tokens"], mem)
+        return functools.partial(fn, memory=None), (params_sds, ins["tokens"])
+
+    # decode shapes
+    cache_kind = "decode" if kind == "decode" else "long"
+    cspecs = SH.cache_specs(cfg, cache_kind, dp_axes=dp)
+    cshapes = jax.eval_shape(
+        lambda: T.init_cache(cfg, b, s, dtype=jnp.bfloat16))
+    cache_sds = _tree_sds(cshapes, cspecs, mesh)
+    tok_sds = _sds((b,), jnp.int32, mesh,
+                   P(dp) if kind == "decode" else P())
+    pos_sds = _sds((), jnp.int32, mesh, P())
+
+    def fn(params, cache, token, pos):
+        return serve_step(params, cache, token, pos, cfg)
+
+    return fn, (params_sds, cache_sds, tok_sds, pos_sds)
+
+
+# ----------------------------------------------- vegas cells (the paper) ----
+
+def build_vegas_cell(mesh, *, neval=2**26, dim=8, name="vegas_fill"):
+    """The paper's own workload on the production mesh: one VEGAS+ iteration
+    (fill + adapt) sharded over every mesh axis."""
+    from repro.core import integrator as I
+    from repro.core.integrands import make_ridge
+    from repro.dist.sharded_fill import make_sharded_fill
+
+    ig = make_ridge(dim=dim, n_peaks=100)
+    cfg = I.VegasConfig(neval=neval, max_it=2, ninc=1024,
+                        chunk=1 << 14).resolve(ig.dim)
+    fill_fn = make_sharded_fill(mesh, mesh.axis_names, cfg)
+    step = functools.partial(I.iteration_step, integrand=ig, cfg=cfg,
+                             fill_fn=fill_fn)
+    st_shapes = jax.eval_shape(
+        lambda k: I.init_state(ig, cfg, k), jax.random.PRNGKey(0))
+    st_sds = jax.tree.map(
+        lambda sh: _sds(sh.shape, sh.dtype, mesh, P()), st_shapes)
+    return step, (st_sds,)
+
+
+# ------------------------------------------------------------- analysis ----
+
+_COLL_RE = re.compile(
+    r"(\w+[\w.-]*)\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s64|u64|s16|u16|pred|s8|u8)"
+                       r"\[([\d,]*)\]")
+
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+          "s64": 8, "u64": 8, "s16": 2, "u16": 2, "pred": 1, "s8": 1, "u8": 1}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the optimized HLO,
+    keyed by op kind."""
+    out = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        _, shape_txt, kind = m.groups()
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_txt)
+    return out
+
+
+def analyze(compiled) -> dict:
+    res = {}
+    try:
+        mem = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                res[k] = int(v)
+    except Exception as e:  # pragma: no cover
+        res["memory_error"] = str(e)
+    try:
+        # NOTE: xla's cost_analysis counts while bodies ONCE (trip counts
+        # ignored) — kept for reference only; the roofline uses hlo_cost.
+        ca = compiled.cost_analysis()
+        res["xla_flops_once"] = float(ca.get("flops", -1))
+    except Exception as e:  # pragma: no cover
+        res["cost_error"] = str(e)
+    try:
+        from repro.launch import hlo_cost
+        hc = hlo_cost.analyze_text(compiled.as_text())
+        res["flops"] = hc["flops"]
+        res["hbm_bytes"] = hc["hbm_bytes"]
+        res["collectives"] = hc["collectives"]
+    except Exception as e:  # pragma: no cover
+        res["hlo_cost_error"] = str(e)
+    return res
+
+
+def run_cell(arch, shape, mesh_name, out_path):
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name}
+    t0 = time.time()
+    try:
+        if arch == "vegas":
+            fn, args = build_vegas_cell(mesh)
+        else:
+            fn, args = build_cell(arch, shape, mesh)
+        lowered = jax.jit(fn).lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        rec.update(analyze(compiled))
+        rec["ok"] = True
+        mem_line = rec.get("temp_size_in_bytes")
+        print(f"[OK] {arch} x {shape} x {mesh_name}: "
+              f"lower {rec['lower_s']}s compile {rec['compile_s']}s "
+              f"flops={rec.get('flops', 0):.3e} temp={mem_line}")
+    except ValueError as e:
+        if str(e) == "skip":
+            rec["ok"] = None
+            rec["skip"] = "long_500k requires sub-quadratic attention"
+            print(f"[SKIP] {arch} x {shape}: not sub-quadratic")
+        else:
+            rec["ok"] = False
+            rec["error"] = traceback.format_exc()[-2000:]
+            print(f"[FAIL] {arch} x {shape} x {mesh_name}: {e}")
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = traceback.format_exc()[-2000:]
+        print(f"[FAIL] {arch} x {shape} x {mesh_name}: {type(e).__name__}: {e}")
+    _append(out_path, rec)
+    return rec
+
+
+def _append(path, rec):
+    path = os.path.abspath(path)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    data = []
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data = [r for r in data
+            if not (r["arch"] == rec["arch"] and r["shape"] == rec["shape"]
+                    and r["mesh"] == rec["mesh"])]
+    data.append(rec)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1)
+    os.replace(tmp, path)
+
+
+def done_cells(path):
+    path = os.path.abspath(path)
+    if not os.path.exists(path):
+        return set()
+    with open(path) as f:
+        return {(r["arch"], r["shape"], r["mesh"]) for r in json.load(f)
+                if r.get("ok") is not False}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--vegas", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.vegas:
+        cells = [("vegas", "fill_2e26")]
+    elif args.all:
+        for a in configs.ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        cells = [(args.arch, args.shape)]
+
+    done = done_cells(args.out)
+    for a, s in cells:
+        for m in meshes:
+            if (a, s, m) in done:
+                print(f"[CACHED] {a} x {s} x {m}")
+                continue
+            run_cell(a, s, m, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""CLI driver for the VEGAS+ engine (the paper's workload).
+
+  PYTHONPATH=src python -m repro.launch.integrate --integrand ridge \
+      --neval 1000000 --iters 20 --config def
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.core import VegasConfig, run
+from repro.core import integrands as igs
+from repro.configs.vegas import PAPER_CONFIGS
+
+INTEGRANDS = {
+    "sine_exp": igs.make_sine_exp,
+    "linear": igs.make_linear,
+    "cosine": igs.make_cosine,
+    "exponential": igs.make_exponential,
+    "roos_arnold": igs.make_roos_arnold,
+    "morokoff_caflisch": igs.make_morokoff_caflisch,
+    "gaussian": igs.make_gaussian,
+    "ridge": igs.make_ridge,
+    "asian": igs.make_asian_option,
+    "asian_geo": lambda: igs.make_asian_option(geometric=True),
+    "feynman": igs.make_feynman_path,
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--integrand", choices=list(INTEGRANDS), default="ridge")
+    ap.add_argument("--neval", type=int, default=500_000)
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--skip", type=int, default=5)
+    ap.add_argument("--config", choices=["def", "vf", "tq"], default="def")
+    ap.add_argument("--backend", choices=["ref", "pallas"], default="ref")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    ig = INTEGRANDS[args.integrand]()
+    base = PAPER_CONFIGS[args.config]
+    cfg = VegasConfig(neval=args.neval, max_it=args.iters, skip=args.skip,
+                      ninc=base.ninc, alpha=base.alpha, beta=base.beta,
+                      backend=args.backend)
+    t0 = time.time()
+    res = run(ig, cfg, key=jax.random.PRNGKey(args.seed))
+    dt = time.time() - t0
+    print(f"integrand={ig.name} dim={ig.dim} config={args.config}")
+    print(f"  result  = {res.mean:.8g} +- {res.sdev:.3g} "
+          f"(chi2/dof {res.chi2_dof:.2f}, {res.n_it} iterations)")
+    if ig.target is not None:
+        pull = (res.mean - ig.target) / max(res.sdev, 1e-30)
+        print(f"  target  = {ig.target:.8g}  pull = {pull:+.2f} sigma")
+    print(f"  wall    = {dt:.2f}s  ({args.neval * args.iters / dt:,.0f} evals/s)")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production mesh: 16x16 (one v5e pod, 256 chips) or 2x16x16 (2 pods).
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (the dry-run sets the host-device-count override before any
+jax initialization)."""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def dp_axes(mesh) -> tuple:
+    """Data-parallel axes: ('pod','data') on the multi-pod mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_local_mesh():
+    """Whatever devices exist locally, as a 1D data mesh (tests/examples)."""
+    n = jax.device_count()
+    return jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))

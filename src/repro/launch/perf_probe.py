@@ -1,0 +1,84 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+"""§Perf iteration probe: recompile one cell with config overrides and print
+the three roofline terms + memory, so hypothesis->change->measure cycles are
+one command:
+
+  python -m repro.launch.perf_probe --arch mistral-large-123b --shape train_4k \
+      --set dense_attn_threshold=2048 microbatches_train_4k=4
+"""
+
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro import configs
+from repro.launch import dryrun as DR
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+
+
+def probe(arch, shape, mesh_name="single", overrides=None, dump_buffers=0):
+    base = configs.get(arch)
+    if overrides:
+        typed = {}
+        for k, v in overrides.items():
+            cur = getattr(base, k)
+            typed[k] = type(cur)(v) if cur is not None else v
+        cfg = dataclasses.replace(base, **typed)
+        configs.get = lambda a, _c=cfg, _o=configs.get: \
+            _c if a in (arch,) or a == cfg.name else _o(a)
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    fn, args = DR.build_cell(arch, shape, mesh)
+    compiled = jax.jit(fn).lower(*args).compile()
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name}
+    rec.update(DR.analyze(compiled))
+    a = RL.analyze_record(rec)
+    t = a["terms"]
+    mem = (rec.get("temp_size_in_bytes", 0)
+           + rec.get("argument_size_in_bytes", 0)) / 1e9
+    print(json.dumps({
+        "overrides": overrides or {},
+        "compute_s": round(t["compute"], 4), "memory_s": round(t["memory"], 4),
+        "collective_s": round(t["collective"], 4),
+        "bottleneck": a["bottleneck"],
+        "model_hlo_ratio": round(a["useful_ratio"], 3) if a["useful_ratio"] else None,
+        "roofline_frac": round(a["roofline_fraction"], 4) if a["roofline_fraction"] else None,
+        "mem_GB": round(mem, 1),
+        "coll_by_kind_GB": {k: round(v / 1e9, 2)
+                            for k, v in (rec.get("collectives") or {}).items()},
+    }))
+    if dump_buffers:
+        import re
+        from collections import Counter
+        big = Counter()
+        for m in re.finditer(r"(f32|bf16|s32|u32|pred)\[([\d,]+)\]",
+                             compiled.as_text()):
+            dt, dims = m.groups()
+            n = 1
+            for x in dims.split(","):
+                n *= int(x)
+            b = n * (4 if dt in ("f32", "s32", "u32") else
+                     (1 if dt == "pred" else 2))
+            if b > 3e8:
+                big[f"{dt}[{dims}]"] = b
+        for k, v in sorted(big.items(), key=lambda kv: -kv[1])[:dump_buffers]:
+            print(f"  BUF {k}: {v/1e9:.2f} GB")
+    return rec
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--set", nargs="*", default=[])
+    ap.add_argument("--buffers", type=int, default=0)
+    args = ap.parse_args()
+    overrides = dict(kv.split("=", 1) for kv in args.set)
+    probe(args.arch, args.shape, args.mesh, overrides, args.buffers)

@@ -1,0 +1,116 @@
+"""Roofline report: turns launch_results/dryrun.json into the §Roofline
+table (EXPERIMENTS.md).
+
+Per (arch x shape x mesh) cell, from the compiled dry-run artifact:
+  compute_s    = HLO_dot_FLOPs / peak            (197 TFLOP/s bf16, v5e)
+  memory_s     = HLO_HBM_bytes / bw              (819 GB/s)
+  collective_s = collective_bytes / link_bw      (~50 GB/s/link ICI)
+All three are per-device, per-step, trip-count-aware (launch/hlo_cost.py).
+MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (prefill/decode), i.e.
+the textbook useful-work count; MODEL/HLO ratio surfaces remat + causal
+over-compute + dispatch overhead.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s
+LINK_BW = 50e9          # bytes/s/link
+
+SHAPE_TOKENS = {
+    "train_4k": ("train", 4096 * 256),
+    "prefill_32k": ("prefill", 32768 * 32),
+    "decode_32k": ("decode", 128),
+    "long_500k": ("decode", 1),
+}
+
+
+def model_flops_per_device(arch, shape, n_devices):
+    from repro import configs
+    if arch == "vegas":
+        return None
+    cfg = configs.get(arch)
+    kind, tokens = SHAPE_TOKENS[shape]
+    n = cfg.active_param_count()
+    mult = 6 if kind == "train" else 2
+    return mult * n * tokens / n_devices
+
+
+def analyze_record(rec):
+    n_dev = 512 if rec["mesh"] == "multi" else 256
+    flops = rec.get("flops") or 0.0
+    hbm = rec.get("hbm_bytes") or 0.0
+    coll = sum((rec.get("collectives") or {}).values())
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    coll_s = coll / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec.get("shape", ""), n_dev) \
+        if rec["arch"] != "vegas" else None
+    ratio = (mf / flops) if (mf and flops) else None
+    # roofline fraction: useful FLOPs per second achievable if the step runs
+    # at the max of the three terms (the bound), vs peak.
+    bound = max(terms.values())
+    frac = (mf / bound / PEAK_FLOPS) if (mf and bound > 0) else \
+        (compute_s / bound if bound > 0 else None)
+    return dict(terms=terms, bottleneck=bottleneck, model_flops=mf,
+                useful_ratio=ratio, roofline_fraction=frac)
+
+
+def markdown_table(path="launch_results/dryrun.json", mesh="single"):
+    with open(path) as f:
+        data = json.load(f)
+    rows = []
+    hdr = ("| arch | shape | compute s | memory s | collective s | bound | "
+           "MODEL/HLO | roofline frac | fits 16GB | one-line fix |")
+    sep = "|" + "---|" * 10
+    rows.append(hdr)
+    rows.append(sep)
+    for r in data:
+        if r["mesh"] != mesh:
+            continue
+        if r.get("ok") is None:
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — "
+                        f"| — | skipped: {r.get('skip','')} |")
+            continue
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | | | |")
+            continue
+        a = analyze_record(r)
+        t = a["terms"]
+        mem_fit = ((r.get("temp_size_in_bytes") or 0)
+                   + (r.get("argument_size_in_bytes") or 0)) / 1e9
+        fix = suggest_fix(r, a)
+        ratio = f"{a['useful_ratio']:.2f}" if a["useful_ratio"] else "n/a"
+        frac = (f"{a['roofline_fraction']:.3f}"
+                if a["roofline_fraction"] is not None else "n/a")
+        fit = f"{mem_fit:.1f} GB" + ("" if mem_fit < 16 else " (!)")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {t['compute']:.3e} | {t['memory']:.3e} | {t['collective']:.3e} "
+            f"| {a['bottleneck']} | {ratio} | {frac} | {fit} | {fix} |")
+    return "\n".join(rows)
+
+
+def suggest_fix(rec, a):
+    b = a["bottleneck"]
+    if b == "memory":
+        return ("blocked/flash attention or fp8 activations to cut HBM "
+                "traffic of the dominant S×S / logits buffers")
+    if b == "collective":
+        return ("overlap all-gather with compute (latency-hiding) or shrink "
+                "FSDP gather granularity")
+    return "already compute-bound: raise MODEL/HLO by trimming remat recompute"
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default="launch_results/dryrun.json")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    print(markdown_table(args.path, args.mesh))

@@ -1,0 +1,3 @@
+"""LM substrate: composable decoder architectures for the assigned configs."""
+
+from .config import ArchConfig, Block  # noqa: F401

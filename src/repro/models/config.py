@@ -1,0 +1,130 @@
+"""Architecture configuration.
+
+A model is a stack of ``n_layers`` blocks. Blocks repeat with a short
+``period`` (1 for uniform stacks, 5 for llama-vision's cross-attn cadence,
+8 for jamba's 1:7 mamba/attn interleave): the layer scan runs over
+``n_layers // period`` steps, each applying the ``period`` distinct block
+templates in order.  This keeps the compiled HLO small (one period body)
+while representing heterogeneous stacks faithfully.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Mixer = Literal["attn", "swa", "xattn", "mamba"]
+Ffn = Literal["mlp", "moe", "none"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    mixer: Mixer = "attn"
+    ffn: Ffn = "mlp"
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden size
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class SsmConfig:
+    d_state: int = 128
+    expand: int = 2
+    head_dim: int = 64
+    conv_width: int = 4
+    chunk: int = 256               # SSD chunk length
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int                   # query heads (0 for attn-free archs)
+    n_kv_heads: int
+    d_ff: int                      # dense-MLP hidden (0 if none)
+    vocab: int
+    blocks: tuple[Block, ...]      # one period of block templates
+    head_dim: int | None = None
+    moe: MoeConfig | None = None
+    ssm: SsmConfig | None = None
+    swa_window: int = 4096
+    rope_theta: float = 500_000.0
+    norm_eps: float = 1e-5
+    # modality frontend stub: extra cross-attention memory (vlm only)
+    xattn_memory_len: int = 0      # e.g. 576 image patch embeddings
+    tie_embeddings: bool = False
+    # large-scale training policy (see train/ and launch/dryrun.py)
+    optimizer: str = "adamw"       # 'adamw' | 'adafactor'
+    params_dtype: str = "float32"  # 'float32' | 'bfloat16' (>=1T configs)
+    compute_dtype: str = "bfloat16"
+    fsdp: bool = False             # shard params/opt over the data axis too
+    microbatches_train_4k: int = 1  # grad-accumulation steps for train_4k
+    sub_quadratic: bool = False    # eligible for long_500k decode
+    dense_attn_threshold: int = 8192  # kv len above which attention is blocked
+    remat_group: int = 1           # periods per 2-level-remat group (sqrt remat)
+    moe_ep_over_data: bool = True  # experts sharded over data (EP) vs FSDP-style
+
+    def __post_init__(self):
+        assert self.n_layers % len(self.blocks) == 0, \
+            (self.name, self.n_layers, len(self.blocks))
+        if self.head_dim is None and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def period(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // self.period
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND MODEL_FLOPS and memory sanity)."""
+        d = self.d_model
+        n = 0
+        for blk in self.blocks:
+            if blk.mixer in ("attn", "swa"):
+                n += d * self.n_heads * self.head_dim      # wq
+                n += 2 * d * self.n_kv_heads * self.head_dim  # wk, wv
+                n += self.n_heads * self.head_dim * d      # wo
+            elif blk.mixer == "xattn":
+                n += d * self.n_heads * self.head_dim * 2  # wq, wo
+                n += 2 * d * self.n_kv_heads * self.head_dim
+            elif blk.mixer == "mamba":
+                s = self.ssm
+                di = s.d_inner(d)
+                nh = s.n_heads(d)
+                n += d * (2 * di + 2 * s.d_state + nh)     # in_proj (z,x,B,C,dt)
+                n += s.conv_width * (di + 2 * s.d_state)   # convs
+                n += di * d + 2 * nh + di                  # out_proj, A, D(dt_bias), norm
+            if blk.ffn == "mlp":
+                n += 3 * d * self.d_ff
+            elif blk.ffn == "moe":
+                n += d * self.moe.n_experts                # router
+                n += self.moe.n_experts * 3 * d * self.moe.d_ff
+            n += 2 * d                                     # 2 norms
+        n *= self.n_periods
+        n += self.vocab * d * (1 if self.tie_embeddings else 2)  # embed (+head)
+        n += d                                             # final norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of n_experts)."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        moe_blocks = sum(1 for b in self.blocks if b.ffn == "moe") * self.n_periods
+        dead = (self.moe.n_experts - self.moe.top_k) * 3 * self.d_model * self.moe.d_ff
+        return full - moe_blocks * dead

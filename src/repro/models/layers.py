@@ -1,0 +1,248 @@
+"""Core layers: RMSNorm, RoPE, GQA/SWA/cross attention (train + decode),
+SwiGLU MLP.  Functional style: ``init_*`` builds a param dict, ``*_apply``
+consumes it.  All matmuls run in ``cfg.compute_dtype``; norms/softmax in f32.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms ----
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    # statistics in f32, application in x.dtype: avoids materializing a
+    # full-size f32 copy of the residual stream (which XLA otherwise stacks
+    # across the layer scan — 35 GB/device on mistral-123b train, §Perf A2).
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + eps).astype(x.dtype)
+    return x * inv * p["scale"].astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope ----
+
+def rope(x, positions, theta):
+    """x (..., S, H, hd), positions (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ attention ----
+
+def init_attention(key, cfg, cross=False):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    dt = jnp.dtype(cfg.params_dtype)
+    return {
+        "wq": _init(ks[0], (d, hq * hd), s, dt),
+        "wk": _init(ks[1], (d, hkv * hd), s, dt),
+        "wv": _init(ks[2], (d, hkv * hd), s, dt),
+        "wo": _init(ks[3], (hq * hd, d), s / math.sqrt(cfg.n_layers), dt),
+    }
+
+
+def _qkv(p, x, memory, cfg):
+    """Project to q/k/v heads. memory!=None => cross-attention source."""
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ct = jnp.dtype(cfg.compute_dtype)
+    src = x if memory is None else memory
+    q = (x.astype(ct) @ p["wq"].astype(ct)).reshape(b, s, hq, hd)
+    k = (src.astype(ct) @ p["wk"].astype(ct)).reshape(b, src.shape[1], hkv, hd)
+    v = (src.astype(ct) @ p["wv"].astype(ct)).reshape(b, src.shape[1], hkv, hd)
+    return q, k, v
+
+
+def _expand_kv(k, hq):
+    """GQA: repeat kv heads to match query heads."""
+    hkv = k.shape[-2]
+    if hkv == hq:
+        return k
+    return jnp.repeat(k, hq // hkv, axis=-2)
+
+
+def _sdpa(q, k, v, mask, cfg):
+    """Dense scaled-dot-product attention. q (b,sq,h,hd), k/v (b,sk,h,hd);
+    mask (sq, sk) True=keep or None."""
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask[None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _blocked_causal_sdpa(q, k, v, cfg, window=None, block=1024):
+    """Memory-bounded causal attention: scan over KV blocks with an online
+    softmax (flash-attention dataflow in pure XLA).  Peak live memory is
+    O(sq*block) per head instead of O(sq*sk).  For SWA only the blocks inside
+    the window contribute (others are masked; the scan is still dense —
+    the over-compute is visible in the roofline and addressed in §Perf)."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    nb = -(-sk // block)
+    pad = nb * block - sk
+    scale = 1.0 / math.sqrt(hd)
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = kp.reshape(b, nb, block, h, hd).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(b, nb, block, h, hd).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        jblk, kj, vj = inp
+        kpos = jblk * block + jnp.arange(block)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, kj).astype(jnp.float32) * scale
+        keep = kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            keep &= kpos[None, :] > qpos[:, None] - window
+        keep &= (kpos < sk)[None, :]
+        logits = jnp.where(keep[None, None], logits, -1e30)
+        mj = jnp.maximum(m, logits.max(-1))
+        alpha = jnp.exp(m - mj)
+        pj = jnp.exp(logits - mj[..., None])
+        lj = l * alpha + pj.sum(-1)
+        accj = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", pj.astype(q.dtype), vj).astype(jnp.float32)
+        return (mj, lj, accj), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (jnp.arange(nb), kb, vb))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (b, sq, h, hd)
+
+
+def attention_train(p, x, cfg, positions, *, window=None, memory=None,
+                    dense_threshold=None):
+    """Full-sequence attention (training / prefill)."""
+    if dense_threshold is None:
+        dense_threshold = cfg.dense_attn_threshold
+    q, k, v = _qkv(p, x, memory, cfg)
+    if memory is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    k = _expand_kv(k, cfg.n_heads)
+    v = _expand_kv(v, cfg.n_heads)
+    sq, sk = q.shape[1], k.shape[1]
+    if memory is not None:
+        out = _sdpa(q, k, v, None, cfg)             # cross-attn: no mask
+    elif sk <= dense_threshold:
+        mask = jnp.tril(jnp.ones((sq, sk), bool))
+        if window is not None:
+            mask &= jnp.triu(jnp.ones((sq, sk), bool), -window + 1)
+        out = _sdpa(q, k, v, mask, cfg)
+    else:
+        out = _blocked_causal_sdpa(q, k, v, cfg, window=window)
+    b, s = x.shape[:2]
+    ct = jnp.dtype(cfg.compute_dtype)
+    return (out.reshape(b, s, -1).astype(ct) @ p["wo"].astype(ct)).astype(x.dtype)
+
+
+def attention_decode(p, x, cache_k, cache_v, pos, cfg, *, window=None,
+                     memory_kv=None):
+    """Single-token decode. x (b, 1, d); cache (b, S, hkv, hd); pos scalar.
+
+    For SWA the cache is a rolling buffer of ``window`` positions; for cross
+    attention the (precomputed) memory kv is attended instead of the cache.
+    Returns (out, new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ct = jnp.dtype(cfg.compute_dtype)
+    if memory_kv is not None:
+        k, v = memory_kv
+        q = (x.astype(ct) @ p["wq"].astype(ct)).reshape(b, 1, hq, hd)
+        out = _sdpa(q, _expand_kv(k, hq), _expand_kv(v, hq), None, cfg)
+        out = (out.reshape(b, 1, -1).astype(ct) @ p["wo"].astype(ct))
+        return out.astype(x.dtype), cache_k, cache_v
+
+    q = (x.astype(ct) @ p["wq"].astype(ct)).reshape(b, 1, hq, hd)
+    k = (x.astype(ct) @ p["wk"].astype(ct)).reshape(b, 1, hkv, hd)
+    v = (x.astype(ct) @ p["wv"].astype(ct)).reshape(b, 1, hkv, hd)
+    q = rope(q, pos[None, None] if pos.ndim == 0 else pos[:, None], cfg.rope_theta)
+    k = rope(k, pos[None, None] if pos.ndim == 0 else pos[:, None], cfg.rope_theta)
+
+    s_cache = cache_k.shape[1]
+    slot = pos % s_cache if window is not None else pos
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
+
+    kk = _expand_kv(cache_k.astype(ct), hq)
+    vv = _expand_kv(cache_v.astype(ct), hq)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
+    kpos = jnp.arange(s_cache)
+    if window is None:
+        live = kpos <= pos                       # plain causal over the cache
+    else:
+        # rolling buffer: every written slot is inside the window already
+        live = kpos < jnp.minimum(pos + 1, s_cache)
+    logits = jnp.where(live[None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(ct)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+    out = (out.reshape(b, 1, -1) @ p["wo"].astype(ct))
+    return out.astype(x.dtype), cache_k, cache_v
+
+
+# ------------------------------------------------------------------ mlp ----
+
+def init_mlp(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.params_dtype)
+    s = 1.0 / math.sqrt(d)
+    return {"w1": _init(ks[0], (d, f), s, dt),
+            "w3": _init(ks[1], (d, f), s, dt),
+            "w2": _init(ks[2], (f, d), s / math.sqrt(cfg.n_layers), dt)}
+
+
+def mlp(p, x, cfg):
+    ct = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(ct)
+    h = jax.nn.silu(xc @ p["w1"].astype(ct)) * (xc @ p["w3"].astype(ct))
+    return (h @ p["w2"].astype(ct)).astype(x.dtype)
+
+
+# ------------------------------------------------------------ embeddings ----
+
+def init_embedding(key, cfg):
+    dt = jnp.dtype(cfg.params_dtype)
+    ks = jax.random.split(key, 2)
+    p = {"embed": _init(ks[0], (cfg.vocab, cfg.d_model), 1.0, dt)}
+    if not cfg.tie_embeddings:
+        p["head"] = _init(ks[1], (cfg.d_model, cfg.vocab),
+                          1.0 / math.sqrt(cfg.d_model), dt)
+    return p
+
+
+def embed(p, tokens, cfg):
+    return jnp.take(p["embed"], tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+
+
+def unembed(p, x, cfg):
+    ct = jnp.dtype(cfg.compute_dtype)
+    w = p["head"] if "head" in p else p["embed"].T
+    return x.astype(ct) @ w.astype(ct)

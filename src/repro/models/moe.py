@@ -1,0 +1,109 @@
+"""Top-k Mixture-of-Experts with sort-based (capacity) dispatch.
+
+FLOP-honest dispatch: instead of the Switch-style dense one-hot einsum (whose
+dispatch FLOPs exceed the expert FLOPs at E=384), token->expert assignment is
+materialized by sorting the (token, expert) pairs and gathering tokens into an
+(E, C, D) grouped buffer; experts run as one grouped einsum; results scatter
+back weighted by router probabilities.  Tokens beyond an expert's capacity
+C = ceil(T*top_k/E * capacity_factor) are dropped (standard practice).
+
+Sharding: expert dim E on the "model" axis (expert parallelism); the grouped
+einsum is then fully local per device and XLA inserts the token all-to-alls.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import constrain
+
+
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_moe(key, cfg):
+    d = cfg.d_model
+    m = cfg.moe
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.params_dtype)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "router": _init(ks[0], (d, m.n_experts), s, jnp.float32),
+        "w1": _init(ks[1], (m.n_experts, d, m.d_ff), s, dt),
+        "w3": _init(ks[2], (m.n_experts, d, m.d_ff), s, dt),
+        "w2": _init(ks[3], (m.n_experts, m.d_ff, d), s / math.sqrt(cfg.n_layers), dt),
+    }
+
+
+def moe_capacity(n_tokens: int, cfg) -> int:
+    m = cfg.moe
+    c = int(math.ceil(n_tokens * m.top_k / m.n_experts * m.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # pad to a multiple of 8 lanes
+
+
+def moe_apply(p, x, cfg):
+    """x (b, s, d) -> (b, s, d). Aux losses omitted at this scale (router
+    z-loss/load-balance hooks would attach here)."""
+    b, s, d = x.shape
+    m = cfg.moe
+    ct = jnp.dtype(cfg.compute_dtype)
+    t = b * s
+    xt = constrain(x.reshape(t, d), "dp", None)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])           # (t, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, m.top_k)              # (t, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based dispatch ------------------------------------------
+    cap = moe_capacity(t, cfg)
+    flat_e = expert.reshape(-1)                               # (t*k,)
+    flat_tok = jnp.repeat(jnp.arange(t), m.top_k)
+    flat_gate = gate.reshape(-1)
+    order = jnp.argsort(flat_e)                               # stable
+    e_sorted = flat_e[order]
+    tok_sorted = flat_tok[order]
+    gate_sorted = flat_gate[order]
+    # rank of each assignment within its expert
+    counts = jnp.bincount(flat_e, length=m.n_experts)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(t * m.top_k) - starts[e_sorted]
+    keep = rank < cap
+    slot = jnp.where(keep, e_sorted * cap + rank, m.n_experts * cap)
+
+    # gather tokens into the grouped buffer (E*C, d)
+    buf_tok = jnp.zeros((m.n_experts * cap + 1,), jnp.int32).at[slot].set(
+        tok_sorted.astype(jnp.int32))
+    buf_live = jnp.zeros((m.n_experts * cap + 1,), ct).at[slot].set(
+        keep.astype(ct))
+    buf_tok, buf_live = buf_tok[:-1], buf_live[:-1]
+    # Cast BEFORE the gather (an f32 gather doubles the dominant buffer) and
+    # pin the expert-major flat layout to the EP axis (= data, matching the
+    # expert-weight sharding so the grouped einsum is local).
+    ep = "dp" if cfg.moe_ep_over_data else "tp"
+    xtc = xt.astype(ct)
+    xg = constrain(xtc[buf_tok], ep, None) * buf_live[:, None]   # (E*C, d)
+    xg = constrain(xg.reshape(m.n_experts, cap, d), ep, None, None)
+
+    # grouped expert FFN (einsum over the expert dim = expert parallelism)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xg, p["w1"].astype(ct))) \
+        * jnp.einsum("ecd,edf->ecf", xg, p["w3"].astype(ct))
+    yg = constrain(jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(ct)),
+                   ep, None, None)                             # (E, C, d)
+
+    # combine: scatter straight from the expert-major (E*C, d) layout — a
+    # per-assignment (t*k, d) gather here would materialize an unsharded
+    # buffer (observed 2x 4.3 GB f32/device on jamba-398b).  Each buffer
+    # slot knows its token (buf_tok) and gate weight; empty slots carry 0.
+    yflat = constrain(yg.reshape(m.n_experts * cap, d), ep, None)
+    gate_slot = jnp.zeros((m.n_experts * cap + 1,), ct).at[slot].set(
+        (gate_sorted * keep).astype(ct))[:-1]
+    contrib = jnp.zeros((t, d), ct).at[buf_tok].add(
+        yflat * gate_slot[:, None])
+    contrib = constrain(contrib, "dp", None)
+    return contrib.reshape(b, s, d).astype(x.dtype)

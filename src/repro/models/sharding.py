@@ -1,0 +1,199 @@
+"""Sharding policy: Megatron-style TP on "model", DP over ("pod","data"),
+optional FSDP (params + optimizer sharded over the data axis), EP for MoE
+(experts on "model"), sequence-sharded KV for long-context decode.
+
+Specs are derived from the parameter tree by path, so any block pattern the
+config system can express gets a consistent policy.  Pods replicate params
+(pure DP over DCN); FSDP shards within a pod only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _tp_enabled(cfg) -> bool:
+    # tiny models (smollm) don't tensor-parallelize: d_ff < 16 lanes/shard
+    return cfg.d_model >= 1024
+
+
+# --------------------------------------------------------------------------
+# Mesh context: lets model code pin ACTIVATION shardings. Without these
+# constraints GSPMD may resolve the FSDP(param-over-data) vs DP(batch-over-
+# data) conflict by all-gathering activations — observed to blow per-device
+# memory by the full DP factor (llama-vision train: 105 GB -> fits after).
+# --------------------------------------------------------------------------
+
+_CTX = {"mesh": None, "tp": "model", "dp": ("data",)}
+
+
+def set_mesh_context(mesh, *, dp_axes=("data",), tp="model"):
+    _CTX.update(mesh=mesh, dp=tuple(dp_axes), tp=tp)
+
+
+def clear_mesh_context():
+    _CTX.update(mesh=None)
+
+
+def _ctx_axis_size(entry, mesh):
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain(x, *entries):
+    """with_sharding_constraint(x, P(*entries)) under the mesh context.
+    No-op outside a context (CPU tests) or when a dim doesn't divide.
+    Entries use the placeholders 'dp'/'tp' resolved from the context."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    resolved = []
+    for i, e in enumerate(entries):
+        if e == "dp":
+            e = _CTX["dp"] if len(_CTX["dp"]) > 1 else _CTX["dp"][0]
+        elif e == "tp":
+            e = _CTX["tp"]
+        if e is not None and x.shape[i] % _ctx_axis_size(e, mesh) != 0:
+            e = None
+        resolved.append(e)
+    from jax.sharding import NamedSharding
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))
+
+
+def param_specs(cfg, *, tp="model", dp="data"):
+    """PartitionSpec pytree matching transformer.init_params(cfg)."""
+    from . import transformer as T  # deferred: transformer imports constrain
+    shapes = jax.eval_shape(lambda k: T.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    use_tp = _tp_enabled(cfg)
+    fs = dp if (cfg.fsdp and use_tp) else None
+
+    def spec_for(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        name = names[-1]
+        stacked = "period" in names           # leading n_periods axis
+        lead = (None,) if stacked else ()
+        if not use_tp:
+            return P(*(lead + (None,) * (leaf.ndim - len(lead))))
+        if name == "embed":
+            return P(tp, fs)
+        if name == "head":
+            return P(fs, tp)
+        if name in ("wq", "wk", "wv", "w1", "w3", "wz", "wx", "wdt"):
+            return P(*lead, fs, tp)
+        if name in ("wo", "w2") and leaf.ndim - len(lead) == 2:
+            return P(*lead, tp, fs)
+        if name == "router":
+            return P(*lead, fs, None)
+        # MoE experts: EP over the DATA axis + TP on d_ff. Sharding experts
+        # over dp means weights never move — tokens all-to-all to their
+        # expert's owner. (FSDP-sharding experts instead forces an all-gather
+        # of ALL E experts per layer per micro while only top_k are used:
+        # measured 28 TB/device/step of ICI traffic on kimi-1T, §Perf B1.)
+        ep = dp if getattr(cfg, "moe_ep_over_data", True) else tp
+        if name in ("w1", "w3") and leaf.ndim - len(lead) == 3:
+            return (P(*lead, ep, None, tp) if ep == dp
+                    else P(*lead, tp, fs, None))   # (E, D, F)
+        if name == "w2" and leaf.ndim - len(lead) == 3:
+            return (P(*lead, ep, tp, None) if ep == dp
+                    else P(*lead, tp, fs, None))   # (E, F, D)
+        if name in ("wb", "wc"):
+            return P(*lead, fs, None)
+        if name == "conv_x":
+            return P(*lead, None, tp)
+        if name in ("a_log", "d_skip", "dt_bias", "norm") and leaf.ndim - len(lead) == 1:
+            return P(*lead, tp) if name != "norm" else P(*lead, tp)
+        # norms ("scale"), everything else: replicated (modulo stacking)
+        return P(*(lead + (None,) * (leaf.ndim - len(lead))))
+
+    def fix_moe(path, leaf):
+        # disambiguate mlp w1/w3/w2 (2D) from moe (3D) — handled by ndim above
+        return spec_for(path, leaf)
+
+    return jax.tree_util.tree_map_with_path(fix_moe, shapes)
+
+
+def batch_spec(*, dp_axes):
+    return P(dp_axes, None)
+
+
+def cache_specs(cfg, kind: str, *, tp="model", dp_axes=("data",)):
+    """Decode-cache PartitionSpecs. kind: 'decode' (batch >= dp) shards batch
+    on data and kv-seq on model; 'long' (batch=1) shards kv-seq across the
+    whole mesh (sequence parallelism for the 500k cache)."""
+    use_tp = _tp_enabled(cfg)
+    seq_axes_long = tuple(a for a in (*dp_axes, tp))
+    specs = {}
+    for j, blk in enumerate(cfg.blocks):
+        if blk.mixer in ("attn", "swa"):
+            if kind == "decode":
+                s = P(None, dp_axes, tp if use_tp else None, None, None)
+            else:
+                s = P(None, None, seq_axes_long, None, None)
+            specs[f"slot{j}"] = {"k": s, "v": s}
+        elif blk.mixer == "xattn":
+            s = (P(None, dp_axes, None, tp if use_tp else None, None)
+                 if kind == "decode" else P(None, None, None, None, None))
+            specs[f"slot{j}"] = {"mk": s, "mv": s}
+        elif blk.mixer == "mamba":
+            if kind == "decode":
+                specs[f"slot{j}"] = {
+                    "ssm": P(None, dp_axes, tp if use_tp else None, None, None),
+                    "conv": P(None, dp_axes, None, tp if use_tp else None)}
+            else:
+                specs[f"slot{j}"] = {
+                    "ssm": P(None, None, tp if use_tp else None, None, None),
+                    "conv": P(None, None, None, tp if use_tp else None)}
+    return specs
+
+
+def sanitize_specs(specs, shapes, mesh):
+    """Drop spec entries that don't divide the dimension evenly (NamedSharding
+    refuses uneven tiling; e.g. vocab 50280 on a 16-way model axis, or kv=8
+    heads on model=16).  Applied at lowering time when the mesh is known."""
+    def ax_size(entry):
+        if entry is None:
+            return 1
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+
+    def fix(spec, shape):
+        dims = shape.shape
+        ent = list(spec) + [None] * (len(dims) - len(spec))
+        out = [e if (e is None or dims[i] % ax_size(e) == 0) else None
+               for i, e in enumerate(ent)]
+        return P(*out)
+
+    return jax.tree.map(fix, specs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_specs_adam(pspecs):
+    return {"m": pspecs, "v": pspecs, "step": P()}
+
+
+def _drop_axis(spec, axis):
+    t = tuple(spec)
+    return P(*(t[:axis] + t[axis + 1:]))
+
+
+def opt_specs_adafactor(pspecs, pshapes):
+    """Factored second moment: vr drops the last dim, vc the second-to-last
+    (only for >=2D params; 1D keep full v)."""
+    def f(spec, shape):
+        if len(shape.shape) >= 2:
+            return {"vr": _drop_axis(spec, len(shape.shape) - 1),
+                    "vc": _drop_axis(spec, len(shape.shape) - 2)}
+        return {"v": spec}
+    return {"fac": jax.tree.map(f, pspecs, pshapes,
+                                is_leaf=lambda x: isinstance(x, P)),
+            "step": P()}

@@ -1,0 +1,306 @@
+"""Composable decoder: block-pattern model built from layers/ssm/moe.
+
+The layer stack is executed as ``lax.scan`` over ``n_periods`` steps, each
+step applying one *period* of block templates (config.py).  Period params are
+stacked on a leading axis, which keeps the lowered HLO size independent of
+depth — essential for compiling 61-88 layer configs against a 512-device
+mesh — and gives remat a natural per-period boundary.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import moe as MOE
+from . import ssm as SSM
+from .config import ArchConfig, Block
+from .sharding import constrain
+
+
+# ------------------------------------------------------------------ init ----
+
+def _init_block(key, blk: Block, cfg: ArchConfig):
+    ks = jax.random.split(key, 4)
+    p = {"norm1": L.init_rmsnorm(cfg.d_model, jnp.dtype(cfg.params_dtype))}
+    if blk.mixer in ("attn", "swa"):
+        p["mixer"] = L.init_attention(ks[0], cfg)
+    elif blk.mixer == "xattn":
+        p["mixer"] = L.init_attention(ks[0], cfg, cross=True)
+    elif blk.mixer == "mamba":
+        p["mixer"] = SSM.init_mamba(ks[0], cfg)
+    if blk.ffn != "none":
+        p["norm2"] = L.init_rmsnorm(cfg.d_model, jnp.dtype(cfg.params_dtype))
+        p["ffn"] = (L.init_mlp(ks[1], cfg) if blk.ffn == "mlp"
+                    else MOE.init_moe(ks[1], cfg))
+    return p
+
+
+def init_params(key, cfg: ArchConfig):
+    k_emb, k_layers = jax.random.split(key)
+    period_keys = jax.random.split(k_layers, cfg.n_periods)
+
+    def init_period(k):
+        ks = jax.random.split(k, cfg.period)
+        return {f"slot{j}": _init_block(ks[j], blk, cfg)
+                for j, blk in enumerate(cfg.blocks)}
+
+    return {
+        "embedding": L.init_embedding(k_emb, cfg),
+        "period": jax.vmap(init_period)(period_keys),
+        "final_norm": L.init_rmsnorm(cfg.d_model, jnp.dtype(cfg.params_dtype)),
+    }
+
+
+# --------------------------------------------------------------- forward ----
+
+def _apply_block(p, x, blk: Block, cfg, positions, memory):
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if blk.mixer == "attn":
+        h = L.attention_train(p["mixer"], h, cfg, positions)
+    elif blk.mixer == "swa":
+        h = L.attention_train(p["mixer"], h, cfg, positions,
+                              window=cfg.swa_window)
+    elif blk.mixer == "xattn":
+        h = L.attention_train(p["mixer"], h, cfg, positions, memory=memory)
+    elif blk.mixer == "mamba":
+        h = SSM.mamba_train(p["mixer"], h, cfg)
+    x = x + h
+    if blk.ffn != "none":
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        h = L.mlp(p["ffn"], h, cfg) if blk.ffn == "mlp" \
+            else MOE.moe_apply(p["ffn"], h, cfg)
+        x = x + h
+    return x
+
+
+def forward(params, tokens, cfg: ArchConfig, *, memory=None, remat=True):
+    """Training forward: tokens (b, s) [+ memory (b, m, d) for vlm] ->
+    logits (b, s, vocab).
+
+    ``cfg.remat_group > 1`` enables two-level (sqrt) remat: the outer scan
+    checkpoints only every ``remat_group``-th period boundary, so the saved
+    residual stack shrinks by the group factor at the cost of one extra
+    group forward during backprop (§Perf A3).
+    """
+    x = constrain(L.embed(params["embedding"], tokens, cfg), "dp", None, None)
+    positions = jnp.arange(tokens.shape[1])
+
+    ct = jnp.dtype(cfg.compute_dtype)
+
+    def period_body(x, pp):
+        # Cast the (still-sharded) param slices to compute dtype FIRST so the
+        # FSDP all-gather moves bf16, not f32 — halves weight-gather HBM and
+        # ICI traffic (§Perf A6).
+        pp = jax.tree.map(
+            lambda w: w.astype(ct) if (w.dtype == jnp.float32 and w.ndim >= 2)
+            else w, pp)
+        for j, blk in enumerate(cfg.blocks):
+            x = _apply_block(pp[f"slot{j}"], x, blk, cfg, positions, memory)
+        return constrain(x, "dp", None, None), None
+
+    g = cfg.remat_group if remat else 1
+    if g <= 1:
+        body = jax.checkpoint(period_body) if remat else period_body
+        x, _ = jax.lax.scan(body, x, params["period"])
+    else:
+        assert cfg.n_periods % g == 0, (cfg.n_periods, g)
+        grouped = jax.tree.map(
+            lambda t: t.reshape((cfg.n_periods // g, g) + t.shape[1:]),
+            params["period"])
+
+        @jax.checkpoint
+        def group_body(x, pg):
+            x, _ = jax.lax.scan(jax.checkpoint(period_body), x, pg)
+            return x, None
+
+        x, _ = jax.lax.scan(group_body, x, grouped)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return L.unembed(params["embedding"], x, cfg)
+
+
+# ----------------------------------------------------------------- cache ----
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    """Decode cache pytree, leaves stacked over n_periods (axis 0)."""
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    np_ = cfg.n_periods
+    cache = {}
+    for j, blk in enumerate(cfg.blocks):
+        if blk.mixer in ("attn", "swa"):
+            s = min(cache_len, cfg.swa_window) if blk.mixer == "swa" else cache_len
+            cache[f"slot{j}"] = {
+                "k": jnp.zeros((np_, batch, s, hkv, hd), dtype),
+                "v": jnp.zeros((np_, batch, s, hkv, hd), dtype)}
+        elif blk.mixer == "xattn":
+            m = cfg.xattn_memory_len
+            cache[f"slot{j}"] = {
+                "mk": jnp.zeros((np_, batch, m, hkv, hd), dtype),
+                "mv": jnp.zeros((np_, batch, m, hkv, hd), dtype)}
+        elif blk.mixer == "mamba":
+            st = SSM.init_mamba_state(cfg, batch, dtype)
+            cache[f"slot{j}"] = jax.tree.map(
+                lambda t: jnp.broadcast_to(t[None], (np_,) + t.shape), st)
+    return cache
+
+
+# ---------------------------------------------------------------- decode ----
+
+def _decode_block(p, x, blk: Block, cache_j, pos, cfg):
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if blk.mixer in ("attn", "swa"):
+        window = cfg.swa_window if blk.mixer == "swa" else None
+        h, ck, cv = L.attention_decode(p["mixer"], h, cache_j["k"],
+                                       cache_j["v"], pos, cfg, window=window)
+        cache_j = {"k": ck, "v": cv}
+    elif blk.mixer == "xattn":
+        h, _, _ = L.attention_decode(p["mixer"], h, None, None, pos, cfg,
+                                     memory_kv=(cache_j["mk"], cache_j["mv"]))
+    elif blk.mixer == "mamba":
+        h, cache_j = SSM.mamba_decode(p["mixer"], h, cache_j, cfg)
+    x = x + h
+    if blk.ffn != "none":
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        h = L.mlp(p["ffn"], h, cfg) if blk.ffn == "mlp" \
+            else MOE.moe_apply(p["ffn"], h, cfg)
+        x = x + h
+    return x, cache_j
+
+
+def decode_step(params, cache, token, pos, cfg: ArchConfig):
+    """One decode step: token (b,) int32, pos () int32 ->
+    (logits (b, vocab), new_cache)."""
+    x = L.embed(params["embedding"], token[:, None], cfg)
+
+    def body(x, inp):
+        pp, cj = inp
+        new = {}
+        for j, blk in enumerate(cfg.blocks):
+            x, new[f"slot{j}"] = _decode_block(pp[f"slot{j}"], x, blk,
+                                               cj[f"slot{j}"], pos, cfg)
+        return constrain(x, "dp", None, None), new
+
+    x, new_cache = jax.lax.scan(body, x, (params["period"], cache))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embedding"], x, cfg)
+    return logits[:, 0], new_cache
+
+
+# --------------------------------------------------------------- prefill ----
+
+def _prefill_block(p, x, blk: Block, cfg, positions, memory, cache_len,
+                   cache_dtype):
+    """Apply one block over the full prompt and emit its decode-cache entry."""
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    entry = None
+    if blk.mixer in ("attn", "swa"):
+        window = cfg.swa_window if blk.mixer == "swa" else None
+        q, k, v = L._qkv(p["mixer"], h, None, cfg)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        kx = L._expand_kv(k, cfg.n_heads)
+        vx = L._expand_kv(v, cfg.n_heads)
+        s = x.shape[1]
+        if s <= cfg.dense_attn_threshold:
+            mask = jnp.tril(jnp.ones((s, s), bool))
+            if window is not None:
+                mask &= jnp.triu(jnp.ones((s, s), bool), -window + 1)
+            out = L._sdpa(q, kx, vx, mask, cfg)
+        else:
+            out = L._blocked_causal_sdpa(q, kx, vx, cfg, window=window)
+        ct = jnp.dtype(cfg.compute_dtype)
+        h = (out.reshape(x.shape[0], s, -1).astype(ct)
+             @ p["mixer"]["wo"].astype(ct)).astype(x.dtype)
+        # cache slot i == token position i (swa: i % window, valid while the
+        # prompt fits the window — the serving wrapper enforces this)
+        keep = min(cache_len, cfg.swa_window) if blk.mixer == "swa" else cache_len
+        kk = k[:, -keep:] if s > keep else k
+        vv = v[:, -keep:] if s > keep else v
+        if kk.shape[1] < keep:  # pad tail slots (masked out by pos in decode)
+            pad = keep - kk.shape[1]
+            kk = jnp.pad(kk, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vv = jnp.pad(vv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if blk.mixer == "swa" and s > keep:
+            # rolling buffer: position p lives at slot p % window
+            shift = s % keep
+            kk = jnp.roll(kk, shift, axis=1)
+            vv = jnp.roll(vv, shift, axis=1)
+        entry = {"k": kk.astype(cache_dtype), "v": vv.astype(cache_dtype)}
+    elif blk.mixer == "xattn":
+        h = L.attention_train(p["mixer"], h, cfg, positions, memory=memory)
+        _, mk, mv = L._qkv(p["mixer"], h, memory, cfg)
+        entry = {"mk": mk.astype(cache_dtype), "mv": mv.astype(cache_dtype)}
+    elif blk.mixer == "mamba":
+        # rerun the chunked scan, capturing the final state
+        h, entry = _mamba_prefill(p["mixer"], h, cfg, cache_dtype)
+    x = x + h
+    if blk.ffn != "none":
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        h = L.mlp(p["ffn"], h, cfg) if blk.ffn == "mlp" \
+            else MOE.moe_apply(p["ffn"], h, cfg)
+        x = x + h
+    return x, entry
+
+
+def _mamba_prefill(p, x, cfg, cache_dtype):
+    """Like ssm.mamba_train but also returns the decode state."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di, nh = s.d_inner(d), s.n_heads(d)
+    ct = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(ct)
+    z = xc @ p["wz"].astype(ct)
+    xi = xc @ p["wx"].astype(ct)
+    b_in = xc @ p["wb"].astype(ct)
+    c_in = xc @ p["wc"].astype(ct)
+    dt = jax.nn.softplus((xc @ p["wdt"].astype(ct)).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    conv_tail = xi[:, -(s.conv_width - 1):, :]
+    xi = jax.nn.silu(SSM._causal_conv(xi, p["conv_x"].astype(ct)))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    bsz, l = x.shape[:2]
+    chunk = min(s.chunk, l)
+    pad = (-l) % chunk
+    if pad:
+        xi = jnp.pad(xi, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    xh = xi.reshape(bsz, l + pad, nh, s.head_dim)
+    y, h_final = SSM._ssd_chunked(xh, dt.astype(ct), a.astype(ct), b_in, c_in, chunk)
+    y = y[:, :l] + xh[:, :l] * p["d_skip"].astype(ct)[None, None, :, None]
+    y = y.reshape(bsz, l, di)
+    y = SSM._gated_norm(y, z, p["norm"])
+    out = (y.astype(ct) @ p["wo"].astype(ct)).astype(x.dtype)
+    state = {"ssm": h_final.astype(cache_dtype),
+             "conv": conv_tail.astype(cache_dtype)}
+    return out, state
+
+
+def prefill(params, tokens, cfg: ArchConfig, *, cache_len: int | None = None,
+            memory=None, remat=True, cache_dtype=jnp.bfloat16):
+    """Prompt processing: returns (last-token logits (b, vocab), cache).
+
+    NOTE (padding caveat): prompts shorter than the cache are assumed
+    right-aligned; serving-grade left-pad handling lives in serve/decode.py.
+    """
+    cache_len = cache_len or tokens.shape[1]
+    x = L.embed(params["embedding"], tokens, cfg)
+    positions = jnp.arange(tokens.shape[1])
+
+    def period_body(x, pp):
+        entries = {}
+        for j, blk in enumerate(cfg.blocks):
+            x, entries[f"slot{j}"] = _prefill_block(
+                pp[f"slot{j}"], x, blk, cfg, positions, memory, cache_len,
+                cache_dtype)
+        return constrain(x, "dp", None, None), entries
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    x, cache = jax.lax.scan(body, x, params["period"])
+    x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = L.unembed(params["embedding"], x, cfg)
+    return logits[:, 0], cache

@@ -1,0 +1,44 @@
+"""Serving loop: batched prefill + greedy/temperature decode.
+
+serve_step is the unit the dry-run lowers for the decode_* shapes: one new
+token against a fixed-size KV cache."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+
+def serve_step(params, cache, token, pos, cfg):
+    """One decode step (the dry-run unit). token (b,), pos () -> logits, cache."""
+    return T.decode_step(params, cache, token, pos, cfg)
+
+
+def generate(params, prompt, cfg, *, steps: int, key=None, temperature=0.0,
+             cache_len: int | None = None, memory=None):
+    """Greedy (or sampled) generation driver used by the examples.
+
+    prompt (b, s) int32. Returns tokens (b, steps).
+    """
+    b, s = prompt.shape
+    cache_len = cache_len or (s + steps)
+    last_logits, cache = T.prefill(params, prompt, cfg, cache_len=cache_len,
+                                   memory=memory)
+    step_fn = jax.jit(functools.partial(T.decode_step, cfg=cfg))
+
+    toks = []
+    logits = last_logits
+    for i in range(steps):
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        toks.append(nxt)
+        logits, cache = step_fn(params, cache, nxt.astype(jnp.int32),
+                                jnp.array(s + i, jnp.int32))
+    return jnp.stack(toks, axis=1)

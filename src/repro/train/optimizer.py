@@ -1,0 +1,107 @@
+"""Optimizers: AdamW (ZeRO-ready — state shards wherever params shard) and
+Adafactor (factored second moment, for the >=100B configs where Adam's m/v
+would not fit the pod).  Functional: (init, update) pairs over pytrees."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]   # (grads, state, params) -> (params, state)
+
+
+def adamw(lr=1e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          grad_clip=1.0) -> Optimizer:
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": zeros,
+                "v": jax.tree.map(jnp.zeros_like, zeros),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr=1e-4, decay_pow=0.8, eps=1e-30, clip_threshold=1.0,
+              weight_decay=0.0) -> Optimizer:
+    """Shazeer & Stern (2018), no momentum, factored v for >=2D params."""
+
+    def init(params):
+        def f(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"fac": jax.tree.map(f, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - t ** -decay_pow
+
+        def upd(p, g, f):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = beta2 * f["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * f["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(axis=-1)[..., None, None], eps))
+                u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                newf = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * f["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                newf = {"v": v}
+            # update clipping (RMS(u) <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), newf
+
+        leaves_p, treedef = jax.tree.flatten(params)
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_f = treedef.flatten_up_to(state["fac"])
+        outs = [upd(p, g, f) for p, g, f in zip(leaves_p, leaves_g, leaves_f)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        new_fac = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        return new_params, {"fac": new_fac, "step": step}
+
+    return Optimizer(init, update)
+
+
+def for_config(cfg, lr=1e-4) -> Optimizer:
+    return adafactor(lr=lr) if cfg.optimizer == "adafactor" else adamw(lr=lr)

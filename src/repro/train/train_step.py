@@ -1,0 +1,94 @@
+"""Train step: LM loss + grad-accumulation microbatching + optimizer.
+
+The microbatch loop is a lax.scan (sequential on device, grads averaged), so
+per-step live activation memory is 1/n_micro of the full batch — the knob
+that lets the 100B-1T configs fit HBM (config.microbatches_train_4k)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.sharding import constrain
+
+
+def lm_loss(params, batch, cfg, memory=None):
+    logits = T.forward(params, batch["tokens"], cfg, memory=memory)
+    logits = constrain(logits.astype(jnp.float32), "dp", None, "tp")
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][..., None],
+                               axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def make_train_step(cfg, optimizer, n_micro: int = 1, mesh=None,
+                    dp_axes=("data",), param_specs=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params", "opt"}; batch = {"tokens" (b, s), "labels" (b, s)
+    [, "memory" (b, m, d)]}. b must divide by n_micro.
+
+    ``mesh``/``dp_axes``: when given, the microbatch reshape is pinned to
+    keep the micro axis UNSHARDED and the batch axis on the data axes —
+    otherwise GSPMD may shard the micro axis and defeat grad accumulation.
+    ``param_specs``: pinning each per-micro grad to its param's sharding
+    turns the per-micro f32 grad ALL-REDUCE into a reduce-scatter into the
+    (ZeRO-sharded) accumulator (§Perf A7).
+    """
+
+    def loss_fn(params, mb):
+        return lm_loss(params, mb, cfg, memory=mb.get("memory"))
+
+    def _pin(t):
+        if mesh is None:
+            return t
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        spec = P(None, dp_axes, *([None] * (t.ndim - 2)))
+        return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+
+    def _pin_grads(g):
+        if mesh is None or param_specs is None:
+            return g
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.tree.map(
+            lambda t, sp: jax.lax.with_sharding_constraint(
+                t, NamedSharding(mesh, sp)),
+            g, param_specs, is_leaf=lambda x: isinstance(x, P))
+
+    def train_step(state, batch):
+        params = state["params"]
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda t: _pin(
+                    t.reshape((n_micro, t.shape[0] // n_micro) + t.shape[1:])),
+                batch)
+
+            def micro(acc, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g = _pin_grads(g)
+                return jax.tree.map(jnp.add, acc, (l.astype(jnp.float32), g)), None
+
+            # accumulate each grad at its param's dtype: f32 models accumulate
+            # in f32; bf16-param giants (>=398B) in bf16 — their f32
+            # accumulator alone is 6+ GB/device (precision note in DESIGN.md)
+            zero = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(jnp.zeros_like, params))
+            (loss, grads), _ = jax.lax.scan(micro, zero, mbs)
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+
+        new_params, new_opt = optimizer.update(grads, state["opt"], params)
+        metrics = {"loss": loss}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_state(key, cfg, optimizer):
+    params = T.init_params(key, cfg)
+    return {"params": params, "opt": optimizer.init(params)}

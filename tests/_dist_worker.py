@@ -1,0 +1,92 @@
+"""Subprocess worker for multi-device tests. Run with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (set by the parent test).
+Prints machine-readable results; exits nonzero on failure."""
+
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import AxisType  # noqa: E402
+
+from repro.core import integrator as I  # noqa: E402
+from repro.core import fill as F  # noqa: E402
+from repro.core.integrands import make_cosine, make_gaussian  # noqa: E402
+from repro.dist import sharded_fill as SF  # noqa: E402
+from repro.dist import checkpoint as CK  # noqa: E402
+
+
+def mesh_of(shape, names):
+    return jax.make_mesh(shape, names,
+                         axis_types=(AxisType.Auto,) * len(names))
+
+
+def main():
+    assert jax.device_count() == 8, jax.device_count()
+    ig = make_cosine(dim=4)
+    cfg = I.VegasConfig(neval=40_000, max_it=6, skip=2, ninc=64, chunk=2048)
+    rc = cfg.resolve(ig.dim)
+    key = jax.random.PRNGKey(0)
+
+    # --- 1) device-count invariance of the fill --------------------------
+    st = I.init_state(ig, rc, key)
+    key_it = jax.random.fold_in(st.key, st.it)
+    plain = F.fill_reference(st.edges, st.n_h, key_it, ig, nstrat=rc.nstrat,
+                             n_cap=rc.n_cap, chunk=rc.chunk)
+    mesh8 = mesh_of((8,), ("data",))
+    fill8 = SF.make_sharded_fill(mesh8, ("data",), rc)
+    shard8 = fill8(st.edges, st.n_h, key_it, ig)
+    np.testing.assert_allclose(shard8.map_sums, plain.map_sums, rtol=2e-5)
+    np.testing.assert_allclose(shard8.cube_s1, plain.cube_s1, rtol=2e-5, atol=1e-7)
+    print("CHECK fill_invariance OK")
+
+    # --- 2) 2D mesh (data x model) sharding over both axes ---------------
+    mesh2d = mesh_of((4, 2), ("data", "model"))
+    fill2d = SF.make_sharded_fill(mesh2d, ("data", "model"), rc)
+    shard2d = fill2d(st.edges, st.n_h, key_it, ig)
+    np.testing.assert_allclose(shard2d.map_sums, plain.map_sums, rtol=2e-5)
+    print("CHECK mesh2d OK")
+
+    # --- 3) full runs agree across meshes (reduction-order tolerance) ----
+    r1 = I.run(ig, cfg, key=key)
+    r8 = I.run(ig, cfg, key=key, fill_fn=fill8)
+    assert abs(r1.mean - r8.mean) < 5e-5 * abs(r1.mean), (r1.mean, r8.mean)
+    print(f"CHECK run_equiv OK mean1={r1.mean:.8g} mean8={r8.mean:.8g}")
+
+    # --- 4) elastic restart: checkpoint on 2 devices, resume on 8 --------
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CK.CheckpointManager(td, keep=2)
+        mesh2 = mesh_of((2,), ("data",))
+        fill2 = SF.make_sharded_fill(mesh2, ("data",), rc)
+        cfg_half = I.VegasConfig(neval=40_000, max_it=3, skip=2, ninc=64,
+                                 chunk=2048)
+        half = I.run(ig, cfg_half, key=key, fill_fn=fill2,
+                     checkpoint_cb=lambda it, s: mgr.save(it, s))
+        like = I.init_state(ig, cfg.resolve(ig.dim), key)
+        like = jax.tree.map(lambda x: x, half.state)
+        restored, step, _ = mgr.restore_latest(like)
+        resumed = I.run(ig, cfg, key=key, state=restored, fill_fn=fill8)
+        straight = I.run(ig, cfg, key=key, fill_fn=fill8)
+        assert abs(resumed.mean - straight.mean) < 5e-5 * abs(straight.mean), \
+            (resumed.mean, straight.mean)
+        print(f"CHECK elastic OK resumed={resumed.mean:.8g} straight={straight.mean:.8g}")
+
+    # --- 5) straggler re-dispatch: shard k recomputed locally ------------
+    total = None
+    for k8 in range(8):
+        part = SF.recompute_shard(st.edges, st.n_h, key_it, ig, rc, k8, 8)
+        total = part if total is None else total + part
+    np.testing.assert_allclose(total.map_sums, plain.map_sums, rtol=2e-5)
+    np.testing.assert_allclose(total.cube_s1, plain.cube_s1, rtol=2e-5, atol=1e-7)
+    print("CHECK straggler OK")
+
+    print("ALL_OK")
+
+
+if __name__ == "__main__":
+    main()

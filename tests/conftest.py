@@ -1,0 +1,9 @@
+import os
+
+# Tests and benches must see the single real CPU device (the 512-device
+# override lives ONLY at the top of launch/dryrun.py, per the dry-run spec).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)

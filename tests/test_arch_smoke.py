@@ -1,0 +1,98 @@
+"""Per-architecture smoke tests: REDUCED same-family configs, one forward +
+one decode step on CPU, asserting shapes and finiteness.  Full configs are
+exercised (shape-only) via the dry-run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_forward_shapes_and_finiteness(arch):
+    cfg = configs.get_reduced(arch)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    b, s = 2, 16
+    tokens = jax.random.randint(jax.random.fold_in(key, 1), (b, s), 0, cfg.vocab)
+    memory = (jax.random.normal(jax.random.fold_in(key, 2),
+                                (b, cfg.xattn_memory_len, cfg.d_model))
+              if cfg.xattn_memory_len else None)
+    logits = T.forward(params, tokens, cfg, memory=memory)
+    assert logits.shape == (b, s, cfg.vocab)
+    assert jnp.isfinite(logits).all(), arch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_decode_step(arch):
+    cfg = configs.get_reduced(arch)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    b, cache_len = 2, 32
+    cache = T.init_cache(cfg, b, cache_len, dtype=jnp.float32)
+    if cfg.xattn_memory_len:
+        # xattn memory kv must be populated (prefill normally does this)
+        for j, blk in enumerate(cfg.blocks):
+            if blk.mixer == "xattn":
+                c = cache[f"slot{j}"]
+                cache[f"slot{j}"] = jax.tree.map(
+                    lambda t: jax.random.normal(key, t.shape, t.dtype) * 0.02, c)
+    token = jax.random.randint(key, (b,), 0, cfg.vocab)
+    logits, new_cache = T.decode_step(params, cache, token,
+                                      jnp.array(0, jnp.int32), cfg)
+    assert logits.shape == (b, cfg.vocab)
+    assert jnp.isfinite(logits).all(), arch
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
+
+
+@pytest.mark.parametrize("arch", ["yi_6b", "mamba2_1_3b", "h2o_danube3_4b"])
+def test_prefill_then_decode_consistent(arch):
+    """decode after prefill continues the sequence the forward pass predicts:
+    prefill(t[:n]) + decode(t[n]) logits == forward(t[:n+1]) last logits."""
+    cfg = configs.get_reduced(arch)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    b, n = 2, 12
+    tokens = jax.random.randint(jax.random.fold_in(key, 1), (b, n + 1), 0, cfg.vocab)
+    last_prefill, cache = T.prefill(params, tokens[:, :n], cfg, cache_len=n + 8,
+                                    remat=False, cache_dtype=jnp.float32)
+    full_logits = T.forward(params, tokens, cfg, remat=False)
+    # decode one step with the prefilled cache
+    logits, _ = T.decode_step(params, cache, tokens[:, n],
+                              jnp.array(n, jnp.int32), cfg)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full_logits[:, -1]),
+                               rtol=5e-2, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(last_prefill),
+                               np.asarray(full_logits[:, n - 1]),
+                               rtol=5e-2, atol=5e-3)
+
+
+def test_param_counts_match_assignment():
+    """Full configs land near their advertised sizes (6ND sanity anchor)."""
+    expect = {
+        "llama_3_2_vision_11b": (9.0e9, 12.5e9),
+        "yi_6b": (5.5e9, 6.6e9),
+        "mistral_large_123b": (118e9, 128e9),
+        "h2o_danube3_4b": (3.2e9, 4.5e9),
+        "smollm_135m": (0.12e9, 0.15e9),
+        "mamba2_1_3b": (1.1e9, 1.5e9),
+        "jamba_1_5_large_398b": (350e9, 440e9),
+        "musicgen_large": (2.8e9, 3.6e9),
+        "phi3_5_moe_42b": (40e9, 45e9),
+        "kimi_k2_1t": (0.95e12, 1.1e12),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = configs.get(arch).param_count()
+        assert lo <= n <= hi, (arch, f"{n:.3e}")
+
+
+def test_active_params_moe():
+    kimi = configs.get("kimi_k2_1t")
+    active = kimi.active_param_count()
+    assert 25e9 <= active <= 40e9, f"{active:.3e}"  # "a32b"
+    phi = configs.get("phi3_5_moe_42b")
+    active = phi.active_param_count()
+    assert 5e9 <= active <= 9e9, f"{active:.3e}"    # "a6.6b"

@@ -1,0 +1,121 @@
+"""Per-kernel allclose sweeps: Pallas vegas_fill (interpret mode) vs the
+pure-jnp oracle in kernels/ref.py, across shapes, dtypes and integrands."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as kref
+from repro.kernels import vegas_fill as vk
+
+INTEGRANDS = {
+    "poly": lambda x: jnp.sum(x * x, axis=-1) + 1.0,
+    "oscillatory": lambda x: jnp.sum(jnp.sin(5.0 * x), axis=-1),
+    "product_peak": lambda x: jnp.prod(1.0 / (0.1 + (x - 0.3) ** 2), axis=-1),
+    "exp": lambda x: jnp.exp(jnp.sum(x, axis=-1)),
+}
+
+
+def _inputs(key, n, d, ninc, nstrat, dtype, lo=-1.0, hi=2.0):
+    n_cubes = nstrat**d
+    k1, k2, k3 = jax.random.split(key, 3)
+    u = jax.random.uniform(k1, (n, d), dtype=dtype)
+    cube = jax.random.randint(k2, (n, 1), 0, n_cubes + 1, dtype=jnp.int32)
+    w = jax.random.uniform(k3, (d, ninc), minval=0.05, maxval=1.0).astype(dtype)
+    w = w / w.sum(1, keepdims=True) * (hi - lo)
+    edges_lo = jnp.concatenate(
+        [jnp.full((d, 1), lo, dtype), lo + jnp.cumsum(w, 1)[:, :-1]], axis=1)
+    return u, cube, edges_lo, w, n_cubes
+
+
+@pytest.mark.parametrize("n,d,ninc,nstrat,tile", [
+    (256, 1, 16, 13, 128),
+    (512, 2, 64, 7, 256),
+    (512, 4, 128, 3, 128),
+    (256, 8, 256, 2, 256),
+    (384, 3, 50, 4, 128),   # ninc not a power of two (paper's vf config = 50)
+    (256, 16, 32, 2, 64),   # high-dim
+])
+@pytest.mark.parametrize("igname", ["poly", "oscillatory"])
+def test_kernel_matches_ref_shapes(n, d, ninc, nstrat, tile, igname):
+    key = jax.random.PRNGKey(n * 1000 + d)
+    u, cube, edges_lo, widths, n_cubes = _inputs(key, n, d, ninc, nstrat, jnp.float32)
+    ig = INTEGRANDS[igname]
+    w_r, ms_r, mc_r = kref.vegas_fill_ref(
+        u, cube, edges_lo, widths, nstrat=nstrat, n_cubes=n_cubes, integrand=ig)
+    w_k, ms_k, mc_k = vk.vegas_fill(
+        u, cube, edges_lo, widths, nstrat=nstrat, n_cubes=n_cubes, integrand=ig,
+        tile=tile, interpret=True)
+    # atol scales with the output magnitude: near integrand zeros the last-ulp
+    # x difference between gather styles is amplified to ~|w|_max * 1e-5.
+    wscale = float(np.abs(np.asarray(w_r)).max()) or 1.0
+    msscale = float(np.abs(np.asarray(ms_r)).max()) or 1.0
+    np.testing.assert_allclose(w_k, w_r, rtol=1e-5, atol=1e-5 * wscale)
+    np.testing.assert_allclose(ms_k, ms_r, rtol=1e-4, atol=1e-5 * msscale)
+    np.testing.assert_allclose(mc_k, mc_r, rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("igname", list(INTEGRANDS))
+def test_kernel_matches_ref_integrands(igname):
+    key = jax.random.PRNGKey(99)
+    u, cube, edges_lo, widths, n_cubes = _inputs(key, 512, 4, 64, 3, jnp.float32)
+    ig = INTEGRANDS[igname]
+    w_r, ms_r, mc_r = kref.vegas_fill_ref(
+        u, cube, edges_lo, widths, nstrat=3, n_cubes=n_cubes, integrand=ig)
+    w_k, ms_k, mc_k = vk.vegas_fill(
+        u, cube, edges_lo, widths, nstrat=3, n_cubes=n_cubes, integrand=ig,
+        tile=256, interpret=True)
+    wscale = float(np.abs(np.asarray(w_r)).max()) or 1.0
+    msscale = float(np.abs(np.asarray(ms_r)).max()) or 1.0
+    np.testing.assert_allclose(w_k, w_r, rtol=1e-4, atol=1e-5 * wscale)
+    np.testing.assert_allclose(ms_k, ms_r, rtol=1e-3, atol=1e-5 * msscale)
+
+
+def test_kernel_all_masked():
+    """Every eval in the overflow bucket -> all outputs zero."""
+    key = jax.random.PRNGKey(5)
+    u, _, edges_lo, widths, n_cubes = _inputs(key, 256, 3, 32, 2, jnp.float32)
+    cube = jnp.full((256, 1), n_cubes, jnp.int32)
+    w_k, ms_k, mc_k = vk.vegas_fill(
+        u, cube, edges_lo, widths, nstrat=2, n_cubes=n_cubes,
+        integrand=INTEGRANDS["poly"], tile=128, interpret=True)
+    assert float(jnp.abs(w_k).max()) == 0.0
+    assert float(jnp.abs(ms_k).max()) == 0.0
+    assert float(mc_k.max()) == 0.0
+
+
+def test_kernel_map_counts_conserve_evals():
+    """Each live eval lands in exactly one interval per dimension."""
+    key = jax.random.PRNGKey(6)
+    n, d = 512, 4
+    u, cube, edges_lo, widths, n_cubes = _inputs(key, n, d, 64, 3, jnp.float32)
+    _, _, mc = vk.vegas_fill(
+        u, cube, edges_lo, widths, nstrat=3, n_cubes=n_cubes,
+        integrand=INTEGRANDS["poly"], tile=128, interpret=True)
+    live = int((cube < n_cubes).sum())
+    np.testing.assert_allclose(np.asarray(mc).sum(axis=1), live, rtol=1e-6)
+
+
+def test_ops_fill_matches_reference_backend_accumulators():
+    """ops.fill (kernel path) and core.fill_reference agree on the cube
+    reduction contract given identical uniforms (checked statistically via a
+    deterministic integrand of x only)."""
+    from repro.core import fill as F
+    from repro.kernels import ops as kops
+    from repro.core import map as vmap_, strat
+
+    ig = INTEGRANDS["poly"]
+    d, ninc, nstrat = 3, 32, 3
+    n_cubes = nstrat**d
+    edges = vmap_.uniform_edges([0.0] * d, [1.0] * d, ninc)
+    n_h = jnp.full((n_cubes,), 4, jnp.int32)
+    key = jax.random.PRNGKey(0)
+    res = kops.fill(edges, n_h, key, ig, nstrat=nstrat, n_cap=256, chunk=256,
+                    interpret=True, tile=128)
+    # invariants rather than bit-match (RNG streams differ by design):
+    assert res.cube_s1.shape == (n_cubes,)
+    assert float(res.map_counts.sum()) == pytest.approx(d * int(n_h.sum()), rel=1e-6)
+    assert (np.asarray(res.cube_s2) >= 0).all()

@@ -1,0 +1,97 @@
+"""Unit + property tests for the adaptive importance map."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import map as vmap_
+
+
+def _random_edges(key, d, ninc, lo=-2.0, hi=3.0):
+    w = jax.random.uniform(key, (d, ninc), minval=0.05, maxval=1.0)
+    w = w / w.sum(1, keepdims=True) * (hi - lo)
+    return jnp.concatenate([jnp.full((d, 1), lo), lo + jnp.cumsum(w, axis=1)], axis=1)
+
+
+def test_uniform_edges_shape_and_bounds():
+    e = vmap_.uniform_edges([0.0, -1.0], [1.0, 2.0], 16)
+    assert e.shape == (2, 17)
+    np.testing.assert_allclose(e[:, 0], [0.0, -1.0])
+    np.testing.assert_allclose(e[:, -1], [1.0, 2.0], rtol=1e-6)
+    assert (jnp.diff(e, axis=1) > 0).all()
+
+
+def test_apply_map_uniform_is_identityish():
+    # Uniform map on [0,1]: x == y and jac == 1.
+    e = vmap_.uniform_edges([0.0], [1.0], 64)
+    y = jnp.linspace(0.001, 0.999, 50)[:, None]
+    x, jac, iy = vmap_.apply_map(e, y)
+    np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(jac, jnp.ones(50), rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=st.integers(1, 6), ninc=st.integers(2, 64), seed=st.integers(0, 2**30))
+def test_apply_map_jacobian_measures_volume(d, ninc, seed):
+    """MC average of the Jacobian over uniform y equals the volume (the map
+    is a change of variables: int_0^1 J dy = prod (b-a))."""
+    key = jax.random.PRNGKey(seed)
+    edges = _random_edges(jax.random.fold_in(key, 1), d, ninc)
+    vol = float(jnp.prod(edges[:, -1] - edges[:, 0]))
+    y = jax.random.uniform(jax.random.fold_in(key, 2), (4096, d))
+    _, jac, _ = vmap_.apply_map(edges, y)
+    est = float(jac.mean())
+    sd = float(jac.std() / np.sqrt(y.shape[0]))
+    assert abs(est - vol) < max(6 * sd, 1e-3 * abs(vol))
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=st.integers(1, 4), ninc=st.integers(4, 64), seed=st.integers(0, 2**30),
+       alpha=st.floats(0.1, 2.0))
+def test_adapt_edges_preserves_bounds_and_monotonicity(d, ninc, seed, alpha):
+    key = jax.random.PRNGKey(seed)
+    edges = _random_edges(jax.random.fold_in(key, 1), d, ninc)
+    sums = jax.random.uniform(jax.random.fold_in(key, 2), (d, ninc)) ** 4
+    counts = jnp.ones((d, ninc)) * 7
+    new = vmap_.adapt_edges(edges, sums, counts, alpha)
+    assert new.shape == edges.shape
+    np.testing.assert_allclose(new[:, 0], edges[:, 0], rtol=1e-6)
+    np.testing.assert_allclose(new[:, -1], edges[:, -1], rtol=1e-6)
+    assert (jnp.diff(new, axis=1) >= 0).all()
+    assert jnp.isfinite(new).all()
+
+
+def test_adapt_concentrates_on_peak():
+    """After adapting on weights peaked in one region, interval widths there
+    must shrink (more intervals near the peak = importance sampling)."""
+    ninc = 64
+    edges = vmap_.uniform_edges([0.0], [1.0], ninc)
+    centers = (edges[0, :-1] + edges[0, 1:]) / 2
+    sums = jnp.exp(-((centers - 0.3) ** 2) / (2 * 0.02**2))[None, :]
+    counts = jnp.ones((1, ninc))
+    new = edges
+    for _ in range(5):
+        new = vmap_.adapt_edges(new, sums, counts, alpha=1.0)
+    widths = jnp.diff(new[0])
+    near = widths[jnp.abs((new[0, :-1] + new[0, 1:]) / 2 - 0.3) < 0.05]
+    far = widths[jnp.abs((new[0, :-1] + new[0, 1:]) / 2 - 0.3) > 0.2]
+    assert near.mean() < far.mean() / 2  # clearly finer near the peak
+
+
+def test_accumulate_map_weights_matches_numpy():
+    key = jax.random.PRNGKey(0)
+    n, d, ninc = 500, 3, 16
+    iy = jax.random.randint(key, (n, d), 0, ninc)
+    w2 = jax.random.uniform(jax.random.fold_in(key, 1), (n,))
+    cnt = (jax.random.uniform(jax.random.fold_in(key, 2), (n,)) > 0.3).astype(jnp.float32)
+    sums, counts = vmap_.accumulate_map_weights(iy, w2, cnt, ninc)
+    sums_np = np.zeros((d, ninc)); counts_np = np.zeros((d, ninc))
+    iy_n, w2_n, c_n = np.asarray(iy), np.asarray(w2), np.asarray(cnt)
+    for e in range(n):
+        for k in range(d):
+            sums_np[k, iy_n[e, k]] += w2_n[e]
+            counts_np[k, iy_n[e, k]] += c_n[e]
+    np.testing.assert_allclose(sums, sums_np, rtol=2e-5)
+    np.testing.assert_allclose(counts, counts_np, rtol=2e-5)

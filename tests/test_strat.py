@@ -1,0 +1,79 @@
+"""Unit + property tests for adaptive stratification."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import strat
+
+
+@settings(max_examples=30, deadline=None)
+@given(neval=st.integers(100, 10_000_000), dim=st.integers(1, 16))
+def test_choose_nstrat_respects_cap(neval, dim):
+    ns = strat.choose_nstrat(neval, dim, max_cubes=1 << 16)
+    assert ns >= 1
+    assert ns**dim <= 1 << 16 or ns == 1
+
+
+def test_map_evals_to_cubes_matches_repeat():
+    n_h = jnp.array([3, 0, 2, 5, 1], jnp.int32)
+    n_cap = 16
+    cube, used = strat.map_evals_to_cubes(n_h, n_cap)
+    expected = np.repeat(np.arange(5), np.asarray(n_h))
+    np.testing.assert_array_equal(np.asarray(cube[: len(expected)]), expected)
+    assert int(used) == 11
+    assert (np.asarray(cube[len(expected):]) == 5).all()  # overflow bucket
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**30), n_cubes=st.integers(1, 300))
+def test_map_evals_to_cubes_property(seed, n_cubes):
+    key = jax.random.PRNGKey(seed)
+    n_h = jax.random.randint(key, (n_cubes,), 0, 7, dtype=jnp.int32)
+    total = int(n_h.sum())
+    n_cap = total + 13
+    cube, used = strat.map_evals_to_cubes(n_h, n_cap)
+    assert int(used) == total
+    counts = np.bincount(np.asarray(cube), minlength=n_cubes + 1)
+    np.testing.assert_array_equal(counts[:n_cubes], np.asarray(n_h))
+    assert counts[n_cubes] == n_cap - total
+
+
+def test_cube_coords_roundtrip():
+    nstrat, dim = 4, 5
+    ids = jnp.arange(nstrat**dim, dtype=jnp.int32)
+    coords = strat.cube_coords(ids, nstrat, dim)
+    pows = nstrat ** np.arange(dim)
+    rec = (np.asarray(coords) * pows).sum(-1)
+    np.testing.assert_array_equal(rec, np.asarray(ids))
+    assert (np.asarray(coords) >= 0).all() and (np.asarray(coords) < nstrat).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**30), beta=st.floats(0.0, 1.5))
+def test_adapt_nh_invariants(seed, beta):
+    key = jax.random.PRNGKey(seed)
+    d_h = jax.random.uniform(key, (64,)) ** 3
+    n_h = strat.adapt_nh(d_h, beta, neval=10_000)
+    assert (np.asarray(n_h) >= 2).all()
+    assert int(n_h.sum()) <= 10_000 + 2 * 64  # eval_capacity bound
+    if beta == 0.0:  # uniform allocation
+        assert len(np.unique(np.asarray(n_h))) == 1
+
+
+def test_adapt_nh_allocates_to_high_variance():
+    d_h = jnp.array([0.0, 0.1, 10.0, 0.1], jnp.float32)
+    n_h = np.asarray(strat.adapt_nh(d_h, 0.75, neval=1000))
+    assert n_h[2] > 10 * n_h[1]
+
+
+def test_stratified_y_stays_in_cube():
+    key = jax.random.PRNGKey(3)
+    nstrat, dim, n = 3, 4, 256
+    cube = jax.random.randint(key, (n,), 0, nstrat**dim, dtype=jnp.int32)
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (n, dim))
+    y = strat.stratified_y(cube, u, nstrat)
+    coords = strat.cube_coords(cube, nstrat, dim)
+    assert (np.asarray(y) >= np.asarray(coords) / nstrat - 1e-7).all()
+    assert (np.asarray(y) <= (np.asarray(coords) + 1) / nstrat + 1e-7).all()
