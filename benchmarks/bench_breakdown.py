@@ -12,7 +12,6 @@ import functools
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import integrator as I
 from repro.core import fill as F

@@ -25,14 +25,14 @@ n = int(sys.argv[1])
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax
-from jax.sharding import AxisType
 from repro.core import integrator as I
 from repro.core.integrands import make_ridge
 from repro.dist import sharded_fill as SF
+from repro.launch.mesh import make_mesh
 
 ig = make_ridge(dim=4, n_peaks=200)
 cfg = I.VegasConfig(neval=200_000, max_it=4, ninc=512, chunk=8192).resolve(ig.dim)
-mesh = jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((n,), ("data",))
 fill = SF.make_sharded_fill(mesh, ("data",), cfg)
 st = I.init_state(ig, cfg, jax.random.PRNGKey(0))
 key = jax.random.fold_in(st.key, 0)

@@ -6,7 +6,6 @@ Run with forced host devices to see the multi-device path on CPU:
       PYTHONPATH=src python examples/multi_device_integrate.py
 """
 
-import os
 import tempfile
 import time
 
@@ -14,7 +13,6 @@ import jax
 
 from repro.core import VegasConfig, run
 from repro.core.integrands import make_ridge
-from repro.core.integrator import VegasConfig as VC
 from repro.dist.checkpoint import CheckpointManager
 from repro.dist.sharded_fill import make_sharded_fill
 from repro.launch.mesh import make_local_mesh

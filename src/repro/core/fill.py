@@ -16,7 +16,6 @@ Three interchangeable backends with one contract:
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -60,7 +59,8 @@ def _eval_chunk(edges, cube, u, integrand, nstrat, n_cubes):
 
 def fill_reference(edges, n_h, key, integrand, *, nstrat: int, n_cap: int,
                    chunk: int, dtype=jnp.float32, start_chunk=0,
-                   n_chunks: int | None = None) -> FillResult:
+                   n_chunks: int | None = None,
+                   kahan: bool = False) -> FillResult:
     """Pure-jnp fill, scanned in chunks of the *global* eval axis.
 
     ``start_chunk``/``n_chunks`` select a contiguous chunk range — the unit of
@@ -68,6 +68,13 @@ def fill_reference(edges, n_h, key, integrand, *, nstrat: int, n_cap: int,
     shard produces is a pure function of (key, chunk id): any device can
     (re)compute any shard — the basis for elastic scaling and straggler
     re-dispatch (DESIGN.md C5/D3).
+
+    ``kahan=True`` carries a Kahan compensation term through the scan, making
+    the accumulated sums independent (to ~1 ulp) of how the chunk range is
+    grouped.  The sharded fill turns this on so a fill split over 2 devices
+    and one split over 8 agree far inside the 2e-5 invariance tolerance —
+    without it, plain-f32 reduction-order drift is amplified by the adaptation
+    feedback across iterations (DESIGN.md §5).
     """
     dim = edges.shape[0]
     ninc = edges.shape[1] - 1
@@ -76,7 +83,8 @@ def fill_reference(edges, n_h, key, integrand, *, nstrat: int, n_cap: int,
     if n_chunks is None:
         n_chunks = n_cap // chunk
 
-    def body(acc, step):
+    def body(carry, step):
+        acc, comp = carry if kahan else (carry, None)
         gchunk = start_chunk + step
         k = jax.random.fold_in(key, gchunk)
         u = jax.random.uniform(k, (chunk, dim), dtype=dtype)
@@ -88,12 +96,19 @@ def fill_reference(edges, n_h, key, integrand, *, nstrat: int, n_cap: int,
         # Overflow bucket (id n_cubes) catches masked evals; dropped below.
         s1 = jnp.zeros((n_cubes + 1,), dtype).at[cube].add(w)
         s2 = jnp.zeros((n_cubes + 1,), dtype).at[cube].add(w2)
-        return acc + FillResult(ms, mc, s1[:n_cubes], s2[:n_cubes]), None
+        contrib = FillResult(ms, mc, s1[:n_cubes], s2[:n_cubes])
+        if not kahan:
+            return acc + contrib, None
+        y = jax.tree.map(jnp.subtract, contrib, comp)
+        t = jax.tree.map(jnp.add, acc, y)
+        comp = jax.tree.map(lambda tt, a, yy: (tt - a) - yy, t, acc, y)
+        return (t, comp), None
 
     zero = FillResult(jnp.zeros((dim, ninc), dtype), jnp.zeros((dim, ninc), dtype),
                       jnp.zeros((n_cubes,), dtype), jnp.zeros((n_cubes,), dtype))
-    acc, _ = jax.lax.scan(body, zero, jnp.arange(n_chunks))
-    return acc
+    init = (zero, zero) if kahan else zero
+    out, _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    return out[0] if kahan else out
 
 
 def fill_pallas(edges, n_h, key, integrand, *, nstrat: int, n_cap: int,

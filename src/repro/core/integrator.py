@@ -152,8 +152,14 @@ def run(integrand: Integrand, cfg: VegasConfig | None = None, *,
         checkpoint_cb: Callable[[int, VegasState], None] | None = None) -> VegasResult:
     """Run VEGAS+ to completion (or resume from ``state``).
 
-    ``checkpoint_cb(it, state)`` is invoked after every iteration; see
-    dist/checkpoint.py for the fault-tolerance wiring.
+    ``fill_fn(edges, n_h, key_it, integrand) -> FillResult`` overrides the
+    configured backend — ``dist.sharded_fill.make_sharded_fill`` builds the
+    multi-device one.  ``checkpoint_cb(it, state)`` is invoked after every
+    iteration (the loop's only host sync; DESIGN.md §5.3) — pass
+    ``lambda it, s: mgr.save(it, s)`` with a ``dist.checkpoint
+    .CheckpointManager`` for fault tolerance; resume by passing the restored
+    ``state`` (the results buffer grows automatically if the resuming config
+    has a larger ``max_it``).
     """
     cfg = (cfg or VegasConfig()).resolve(integrand.dim)
     key = key if key is not None else jax.random.PRNGKey(0)

@@ -1,0 +1,18 @@
+"""repro.dist: multi-device scale-out for the VEGAS+ fill phase.
+
+Two orthogonal pieces (DESIGN.md §5):
+  * :mod:`sharded_fill` — shard the global chunk axis of the fill over a JAX
+    mesh (the paper's multi-GPU decomposition, C5, recast as shard_map), with
+    a per-shard recompute hook for straggler re-dispatch.
+  * :mod:`checkpoint` — save/restore the O(KB) :class:`VegasState` payload so
+    a run checkpointed on one device count resumes on another (elastic
+    scaling; the payload is mesh-free by construction).
+"""
+
+from . import checkpoint, sharded_fill  # noqa: F401
+from .checkpoint import CheckpointManager, latest, restore, save  # noqa: F401
+from .sharded_fill import (  # noqa: F401
+    make_sharded_fill,
+    recompute_shard,
+    shard_chunk_range,
+)

@@ -1,0 +1,130 @@
+"""Checkpoint / restore for fault-tolerant, elastic VEGAS+ runs.
+
+The checkpoint payload is the :class:`~repro.core.integrator.VegasState`
+pytree — O(KB): map edges, per-cube allocation, base key, iteration counter,
+per-iteration results (DESIGN.md §5).  Nothing in it references a mesh or a
+device count, so a run checkpointed on 2 devices resumes on 8 (or on one):
+the sharded fill re-derives every shard's stream from (key, chunk id) alone.
+
+Format: a single ``.npz`` holding the pytree leaves in flatten order plus
+``step`` and a JSON ``meta`` blob.  The tree *structure* is not serialized;
+``restore(path, like)`` rebuilds against a template pytree, which keeps the
+format trivial and the payload inspectable with plain numpy.
+
+Writes are atomic (tmp file + ``os.replace``): a checkpoint either exists
+complete or not at all, and ``latest``/``restore_latest`` never see partial
+files.  ``CheckpointManager`` adds ``ckpt_<step>.npz`` naming, keep-last-N
+retention, and corrupt-file fallback on restore.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_CKPT_RE = re.compile(r"^ckpt_(\d+)\.npz$")
+
+
+def save(path: str, tree, step: int = 0, meta: dict | None = None) -> str:
+    """Atomically write ``tree``'s leaves (+ ``step``, ``meta``) to ``path``."""
+    leaves = jax.tree.leaves(tree)
+    payload = {f"leaf_{i}": np.asarray(leaf) for i, leaf in enumerate(leaves)}
+    payload["__step__"] = np.asarray(int(step), dtype=np.int64)
+    payload["__meta__"] = np.frombuffer(
+        json.dumps(meta or {}).encode("utf-8"), dtype=np.uint8)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **payload)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return path
+
+
+def restore(path: str, like):
+    """Read a checkpoint back into the structure of the ``like`` pytree.
+
+    Returns ``(tree, step, meta)``.  Leaf count must match ``like``; dtypes
+    and shapes come from the file (so a resumed run may later grow e.g. the
+    results buffer itself — see ``integrator.run``).
+    """
+    treedef = jax.tree.structure(like)
+    n_leaves = treedef.num_leaves
+    with np.load(path) as z:
+        step = int(z["__step__"])
+        raw = bytes(z["__meta__"].tobytes())
+        meta = json.loads(raw.decode("utf-8")) if raw else {}
+        leaves = [jnp.asarray(z[f"leaf_{i}"]) for i in range(n_leaves)]
+    return jax.tree.unflatten(treedef, leaves), step, meta
+
+
+def _candidates(ckpt_dir: str):
+    """(step, path) for every complete checkpoint in ``ckpt_dir``, newest
+    first.  ``.tmp`` leftovers from interrupted writes never match."""
+    try:
+        names = os.listdir(ckpt_dir)
+    except FileNotFoundError:
+        return []
+    out = []
+    for name in names:
+        m = _CKPT_RE.match(name)
+        if m:
+            out.append((int(m.group(1)), os.path.join(ckpt_dir, name)))
+    return sorted(out, reverse=True)
+
+
+def latest(ckpt_dir: str) -> str | None:
+    """Path of the newest complete checkpoint, or None if there is none."""
+    cand = _candidates(ckpt_dir)
+    return cand[0][1] if cand else None
+
+
+class CheckpointManager:
+    """``ckpt_<step>.npz`` files in ``dir`` with keep-last-``keep`` retention.
+
+    Wire into a run as ``run(..., checkpoint_cb=lambda it, s: mgr.save(it, s))``;
+    resume with ``state, step, meta = mgr.restore_latest(template_state)``.
+    """
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        assert keep >= 1, keep
+        self.dir = ckpt_dir
+        self.keep = keep
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def path_for(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{int(step)}.npz")
+
+    def save(self, step: int, tree, meta: dict | None = None) -> str:
+        path = save(self.path_for(step), tree, step=step, meta=meta)
+        for _, old in _candidates(self.dir)[self.keep:]:
+            try:
+                os.remove(old)
+            except OSError:
+                pass  # concurrent cleanup is not an error
+        return path
+
+    def restore_latest(self, like):
+        """Restore the newest readable checkpoint, falling back past corrupt
+        files (a crash mid-retention or a torn copy must not kill the resume).
+
+        Returns None when the directory holds no checkpoints at all (cold
+        start — see launch/train.py); raises FileNotFoundError when
+        checkpoints exist but none is readable (data loss must be loud)."""
+        cand = _candidates(self.dir)
+        if not cand:
+            return None
+        errors = []
+        for step, path in cand:
+            try:
+                return restore(path, like)
+            except Exception as e:  # corrupt/truncated/wrong-arity file
+                errors.append(f"{path}: {e!r}")
+        raise FileNotFoundError(
+            f"no readable checkpoint in {self.dir!r} "
+            f"(skipped: {'; '.join(errors)})")

@@ -1,0 +1,113 @@
+"""Sharded fill: distribute the fill phase's chunk axis over a JAX mesh.
+
+The unit of distribution is the *global chunk index* that already keys the
+fill's RNG (core/fill.py, DESIGN.md C5): chunk ``g`` draws its uniforms from
+``fold_in(key_it, g)`` and finds its hypercubes from the global eval offset
+``g * chunk``, so the numbers a shard produces are a pure function of
+``(key, g)`` — independent of which device computes them, how many devices
+exist, or in what order shards run.  Sharding is therefore just a static
+partition of ``range(n_cap // chunk)``:
+
+  * every shard owns the same *static* number of chunks (ceil division), so
+    the scanned per-shard program is identical everywhere (no divergence,
+    the paper's C1 balance applied across devices);
+  * ranges that extend past the real chunk count contribute exactly zero —
+    their evals land in the overflow cube bucket and are masked (C2) — so
+    uneven shard counts need no special casing;
+  * per-shard partials are one psum away from the global
+    :class:`~repro.core.fill.FillResult`; the reduced accumulators are
+    O(d*ninc + n_cubes) regardless of ``neval`` (the Amdahl argument behind
+    the paper's 0.85 efficiency at 8 GPUs, Table 8).
+
+Device-count invariance (checked by tests/_dist_worker.py at rtol 2e-5: the
+tolerance covers float32 reduction-order differences only, the sampled
+streams are bit-identical) is what makes elastic restart (checkpoint.py) and
+straggler re-dispatch (:func:`recompute_shard`, DESIGN.md D3/§5) safe.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+try:  # jax >= 0.6: shard_map graduated out of experimental
+    from jax import shard_map as _shard_map
+except ImportError:  # jax <= 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+from repro.core import fill as fill_mod
+
+
+def mesh_shard_count(mesh, axis_names) -> int:
+    """Number of fill shards = product of the mesh extents being sharded over."""
+    n = 1
+    for a in axis_names:
+        n *= mesh.shape[a]
+    return n
+
+
+def shard_chunk_range(total_chunks: int, shard: int, n_shards: int):
+    """Contiguous chunk range ``[start, start + count)`` owned by ``shard``.
+
+    Every shard gets the same static ``count`` (ceil division) so all devices
+    compile and run the identical scanned program; shards whose range extends
+    past ``total_chunks`` simply accumulate zeros there (overflow-bucket
+    masking, DESIGN.md C2).  Ranges partition ``[0, n_shards * count)`` and
+    are disjoint, so summing every shard's partial reproduces the global fill.
+    """
+    count = -(-total_chunks // n_shards)
+    return shard * count, count
+
+
+def make_sharded_fill(mesh, axis_names, resolved_cfg):
+    """Build a drop-in ``fill_fn`` for ``core.integrator.iteration_step``.
+
+    ``fill_fn(edges, n_h, key, integrand)`` shard_maps the reference fill over
+    the mesh axes named in ``axis_names`` (1D or 2D meshes: shards are
+    enumerated in row-major order over the named axes) and psum-reduces the
+    per-shard :class:`FillResult` partials, returning the same replicated
+    result on every device.  Works eagerly and under jit (``run`` jits the
+    whole iteration around it, so adaptation stays on-device, C4/C6).
+    """
+    rc = resolved_cfg
+    axis_names = tuple(axis_names)
+    n_shards = mesh_shard_count(mesh, axis_names)
+    total_chunks = rc.n_cap // rc.chunk
+    _, per_shard = shard_chunk_range(total_chunks, 0, n_shards)
+    dtype = jnp.dtype(rc.dtype)
+
+    def fill_fn(edges, n_h, key, integrand):
+        def body(edges, n_h, key):
+            idx = jnp.zeros((), jnp.int32)
+            for a in axis_names:  # row-major linear shard index
+                idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+            part = fill_mod.fill_reference(
+                edges, n_h, key, integrand, nstrat=rc.nstrat, n_cap=rc.n_cap,
+                chunk=rc.chunk, dtype=dtype, start_chunk=idx * per_shard,
+                n_chunks=per_shard, kahan=True)
+            return jax.tree.map(lambda x: jax.lax.psum(x, axis_names), part)
+
+        sharded = _shard_map(body, mesh=mesh, in_specs=(P(), P(), P()),
+                             out_specs=P())
+        return sharded(edges, n_h, key)
+
+    return fill_fn
+
+
+def recompute_shard(edges, n_h, key, integrand, resolved_cfg, shard: int,
+                    n_shards: int) -> fill_mod.FillResult:
+    """Recompute one shard's partial locally — no mesh required.
+
+    The straggler / failure re-dispatch hook (DESIGN.md D3/§5): because the
+    RNG is keyed by global chunk id, any host can recompute shard ``shard``
+    of an ``n_shards``-way fill and get bit-identical samples to what the
+    straggling device would have produced.  Summing all shards' partials
+    equals the unsharded fill (checked by tests/_dist_worker.py check 5).
+    """
+    rc = resolved_cfg
+    start, count = shard_chunk_range(rc.n_cap // rc.chunk, shard, n_shards)
+    return fill_mod.fill_reference(
+        edges, n_h, key, integrand, nstrat=rc.nstrat, n_cap=rc.n_cap,
+        chunk=rc.chunk, dtype=jnp.dtype(rc.dtype), start_chunk=start,
+        n_chunks=count, kahan=True)

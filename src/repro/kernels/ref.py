@@ -6,7 +6,6 @@ semantics); tests assert_allclose kernel-vs-ref across shape/dtype sweeps.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

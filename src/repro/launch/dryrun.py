@@ -33,7 +33,7 @@ from repro.launch.mesh import make_production_mesh, dp_axes
 from repro.models import sharding as SH
 from repro.models import transformer as T
 from repro.train import optimizer as OPT
-from repro.train.train_step import make_train_step, init_state
+from repro.train.train_step import make_train_step
 from repro.serve.decode import serve_step
 
 SHAPES = {

@@ -18,7 +18,6 @@ at the shapes in question).
 
 from __future__ import annotations
 
-import json
 import re
 from collections import defaultdict
 

@@ -1,20 +1,38 @@
-"""Production mesh: 16x16 (one v5e pod, 256 chips) or 2x16x16 (2 pods).
+"""Mesh construction: production (16x16 / 2x16x16) and local meshes.
 
-A FUNCTION, not a module constant: importing this module must never touch
+FUNCTIONS, not module constants: importing this module must never touch
 jax device state (the dry-run sets the host-device-count override before any
-jax initialization)."""
+jax initialization).
+
+``make_mesh`` papers over a jax API gap: ``jax.sharding.AxisType`` (and the
+``axis_types=`` kwarg of ``jax.make_mesh``) only exists on newer jax; on
+older versions every mesh axis is implicitly Auto, which is exactly what we
+want, so the kwarg is simply dropped.  All mesh construction in this repo
+(tests, examples, benches) goes through this one shim."""
 
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # older jax: all axes behave as Auto
+    _AxisType = None
+
+
+def make_mesh(shape, axis_names):
+    """``jax.make_mesh`` with Auto axis types across jax versions."""
+    if _AxisType is not None:
+        return jax.make_mesh(shape, axis_names,
+                             axis_types=(_AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(shape, axis_names)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (one v5e pod, 256 chips) or 2x16x16 (2 pods)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def dp_axes(mesh) -> tuple:
@@ -23,6 +41,7 @@ def dp_axes(mesh) -> tuple:
 
 
 def make_local_mesh():
-    """Whatever devices exist locally, as a 1D data mesh (tests/examples)."""
-    n = jax.device_count()
-    return jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))
+    """Whatever devices exist locally, as a 1D data mesh (tests/examples).
+    This is the mesh ``dist.sharded_fill.make_sharded_fill`` expects for
+    single-host multi-device runs (DESIGN.md §5)."""
+    return make_mesh((jax.device_count(),), ("data",))

@@ -14,7 +14,6 @@ over-compute + dispatch overhead.
 from __future__ import annotations
 
 import json
-import os
 
 PEAK_FLOPS = 197e12     # bf16 / chip
 HBM_BW = 819e9          # bytes/s

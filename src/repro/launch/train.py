@@ -10,19 +10,14 @@ pipeline with sharded train steps, checkpoint/restart, and loss logging.
 from __future__ import annotations
 
 import argparse
-import math
-import os
 import time
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
 from repro.dist.checkpoint import CheckpointManager
 from repro.launch.mesh import make_local_mesh
 from repro.models import sharding as SH
-from repro.models import transformer as T
 from repro.train import optimizer as OPT
 from repro.train.data import DataLoader
 from repro.train.train_step import make_train_step, init_state
@@ -74,8 +69,11 @@ def main(argv=None):
         if mgr is not None and (it + 1) % args.ckpt_every == 0:
             jax.block_until_ready(state["params"])
             mgr.save(it + 1, state)
-    print(f"[train] done: first logged loss {losses[0]:.4f} -> "
-          f"last {losses[-1]:.4f}")
+    if losses:
+        print(f"[train] done: first logged loss {losses[0]:.4f} -> "
+              f"last {losses[-1]:.4f}")
+    else:  # resumed at/after --steps: nothing left to do
+        print(f"[train] done: resumed at step {start} >= {args.steps}, no-op")
     return losses
 
 

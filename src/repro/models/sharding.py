@@ -10,7 +10,6 @@ config system can express gets a consistent policy.  Pods replicate params
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 
@@ -47,8 +46,10 @@ def _ctx_axis_size(entry, mesh):
 
 def constrain(x, *entries):
     """with_sharding_constraint(x, P(*entries)) under the mesh context.
-    No-op outside a context (CPU tests) or when a dim doesn't divide.
-    Entries use the placeholders 'dp'/'tp' resolved from the context."""
+    No-op outside a context (CPU tests), when the mesh lacks the resolved
+    axis (e.g. 'tp'->'model' on the 1D local data mesh), or when a dim
+    doesn't divide.  Entries use the placeholders 'dp'/'tp' resolved from
+    the context."""
     mesh = _CTX["mesh"]
     if mesh is None:
         return x
@@ -58,8 +59,12 @@ def constrain(x, *entries):
             e = _CTX["dp"] if len(_CTX["dp"]) > 1 else _CTX["dp"][0]
         elif e == "tp":
             e = _CTX["tp"]
-        if e is not None and x.shape[i] % _ctx_axis_size(e, mesh) != 0:
-            e = None
+        if e is not None:
+            axes = e if isinstance(e, tuple) else (e,)
+            if any(a not in mesh.shape for a in axes):
+                e = None
+            elif x.shape[i] % _ctx_axis_size(e, mesh) != 0:
+                e = None
         resolved.append(e)
     from jax.sharding import NamedSharding
     return jax.lax.with_sharding_constraint(

@@ -9,7 +9,6 @@ mesh — and gives remat a natural per-period boundary.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ that lets the 100B-1T configs fit HBM (config.microbatches_train_4k)."""
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -9,20 +9,19 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-from jax.sharding import AxisType  # noqa: E402
 
 from repro.core import integrator as I  # noqa: E402
 from repro.core import fill as F  # noqa: E402
-from repro.core.integrands import make_cosine, make_gaussian  # noqa: E402
+from repro.core.integrands import make_cosine  # noqa: E402
 from repro.dist import sharded_fill as SF  # noqa: E402
 from repro.dist import checkpoint as CK  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
 
 
 def mesh_of(shape, names):
-    return jax.make_mesh(shape, names,
-                         axis_types=(AxisType.Auto,) * len(names))
+    # launch.mesh.make_mesh: Auto axis types where the jax version has them.
+    return make_mesh(shape, names)
 
 
 def main():
@@ -67,8 +66,9 @@ def main():
                                  chunk=2048)
         half = I.run(ig, cfg_half, key=key, fill_fn=fill2,
                      checkpoint_cb=lambda it, s: mgr.save(it, s))
+        # Restore against a freshly-initialized template (the launch/train.py
+        # pattern): only the tree STRUCTURE matters, shapes come from the file.
         like = I.init_state(ig, cfg.resolve(ig.dim), key)
-        like = jax.tree.map(lambda x: x, half.state)
         restored, step, _ = mgr.restore_latest(like)
         resumed = I.run(ig, cfg, key=key, state=restored, fill_fn=fill8)
         straight = I.run(ig, cfg, key=key, fill_fn=fill8)

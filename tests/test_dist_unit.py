@@ -1,0 +1,110 @@
+"""In-process unit tests for repro.dist: chunk-range partition math and
+CheckpointManager edge behavior. The full 8-device integration suite lives in
+test_distributed.py (subprocess); these run on the single real CPU device."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.integrator import VegasConfig
+from repro.dist import checkpoint as CK
+from repro.dist.sharded_fill import shard_chunk_range
+
+
+# --- chunk-range partition math ---------------------------------------------
+
+@pytest.mark.parametrize("total,n_shards", [
+    (34, 8),   # uneven: ceil(34/8)=5, last shard range is all padding
+    (34, 2), (34, 1), (7, 8),  # more shards than chunks
+    (64, 8),   # exact division
+    (1, 3),
+])
+def test_ranges_disjoint_and_cover(total, n_shards):
+    covered = set()
+    counts = set()
+    for k in range(n_shards):
+        start, count = shard_chunk_range(total, k, n_shards)
+        counts.add(count)
+        rng = set(range(start, start + count))
+        assert not (rng & covered), "shard ranges overlap"
+        covered |= rng
+    # Same static per-shard count everywhere (identical compiled program).
+    assert len(counts) == 1
+    # Union covers every real chunk; anything extra is masked padding, and
+    # there is less than one padding chunk per shard (ceil division).
+    assert covered >= set(range(total))
+    assert len(covered) - total < n_shards
+
+
+def test_device_count_changes_grouping_not_coverage():
+    total = 34
+    for n in (1, 2, 4, 8, 16):
+        real = set()
+        for k in range(n):
+            start, count = shard_chunk_range(total, k, n)
+            real |= set(range(start, min(start + count, total)))
+        assert real == set(range(total)), n
+
+
+def test_resolve_pads_n_cap_to_chunk_multiple():
+    cfg = VegasConfig(neval=40_000, ninc=64, chunk=2048)
+    rc = cfg.resolve(4)
+    assert rc.n_cap % rc.chunk == 0
+    assert rc.n_cap >= rc.neval  # capacity never shrinks below the target
+    # The padded tail is what overflow-bucket masking (DESIGN.md C2) absorbs.
+    assert rc.n_cap - (rc.neval + 2 * rc.n_cubes) < rc.chunk
+
+
+# --- CheckpointManager edge behavior ----------------------------------------
+
+def test_restore_latest_empty_dir_returns_none(tmp_path):
+    """Cold start: no checkpoints is not an error (launch/train.py resumes
+    iff restore_latest returns something)."""
+    mgr = CK.CheckpointManager(str(tmp_path), keep=2)
+    assert mgr.restore_latest({"x": jnp.zeros((2,))}) is None
+    # .tmp leftovers from a torn write still count as "no checkpoints".
+    (tmp_path / "ckpt_0.npz.tmp").write_bytes(b"garbage")
+    assert mgr.restore_latest({"x": jnp.zeros((2,))}) is None
+
+
+def test_restore_latest_skips_corrupt_file(tmp_path):
+    mgr = CK.CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, {"x": jnp.array([1.0])})
+    # A later checkpoint that is complete-looking but unreadable garbage.
+    (tmp_path / "ckpt_2.npz").write_bytes(b"not a zip file")
+    got, step, _ = mgr.restore_latest({"x": jnp.zeros((1,))})
+    assert step == 1 and float(got["x"][0]) == 1.0
+
+
+def test_restore_latest_all_corrupt_raises(tmp_path):
+    mgr = CK.CheckpointManager(str(tmp_path), keep=3)
+    (tmp_path / "ckpt_0.npz").write_bytes(b"garbage")
+    with pytest.raises(FileNotFoundError):
+        mgr.restore_latest({"x": jnp.zeros((1,))})
+
+
+def test_restore_wrong_structure_is_corrupt(tmp_path):
+    """Leaf-count mismatch against the template counts as unreadable."""
+    mgr = CK.CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(0, {"x": jnp.zeros((1,))})
+    with pytest.raises(FileNotFoundError):
+        mgr.restore_latest({"x": jnp.zeros((1,)), "y": jnp.zeros((1,))})
+
+
+def test_manager_retention_never_removes_newest(tmp_path):
+    mgr = CK.CheckpointManager(str(tmp_path), keep=1)
+    for s in (2, 7, 5):  # out-of-order saves: retention is by step, not mtime
+        mgr.save(s, {"x": jnp.array([float(s)])})
+    assert os.listdir(tmp_path) == ["ckpt_7.npz"]
+    got, step, _ = mgr.restore_latest({"x": jnp.zeros((1,))})
+    assert step == 7 and float(got["x"][0]) == 7.0
+
+
+def test_meta_roundtrip_and_defaults(tmp_path):
+    p = str(tmp_path / "c.npz")
+    CK.save(p, [jnp.arange(3)], step=11)
+    back, step, meta = CK.restore(p, [jnp.zeros((3,), jnp.int32)])
+    assert step == 11 and meta == {}
+    np.testing.assert_array_equal(np.asarray(back[0]), np.arange(3))

@@ -1,7 +1,6 @@
 """Per-kernel allclose sweeps: Pallas vegas_fill (interpret mode) vs the
 pure-jnp oracle in kernels/ref.py, across shapes, dtypes and integrands."""
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -103,9 +102,8 @@ def test_ops_fill_matches_reference_backend_accumulators():
     """ops.fill (kernel path) and core.fill_reference agree on the cube
     reduction contract given identical uniforms (checked statistically via a
     deterministic integrand of x only)."""
-    from repro.core import fill as F
     from repro.kernels import ops as kops
-    from repro.core import map as vmap_, strat
+    from repro.core import map as vmap_
 
     ig = INTEGRANDS["poly"]
     d, ninc, nstrat = 3, 32, 3

@@ -4,9 +4,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import map as vmap_
+# Property tests need hypothesis (requirements-dev.txt); skip the module —
+# not the whole collection — where it is absent.
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import map as vmap_  # noqa: E402
 
 
 def _random_edges(key, d, ninc, lo=-2.0, hi=3.0):

@@ -3,9 +3,14 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core import strat
+# Property tests need hypothesis (requirements-dev.txt); skip the module —
+# not the whole collection — where it is absent.
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import strat  # noqa: E402
 
 
 @settings(max_examples=30, deadline=None)
