@@ -22,9 +22,9 @@ def main() -> None:
     fast = not args.full
     only = set(filter(None, args.only.split(",")))
 
-    from . import (bench_applications, bench_breakdown, bench_integrands,
-                   bench_lm_step, bench_multidevice, bench_scaling,
-                   bench_stratification)
+    from . import (bench_applications, bench_batch, bench_breakdown,
+                   bench_integrands, bench_lm_step, bench_multidevice,
+                   bench_scaling, bench_stratification)
 
     suites = {
         "table1": bench_breakdown,
@@ -33,6 +33,7 @@ def main() -> None:
         "fig8": bench_stratification,
         "table8": bench_multidevice,
         "table9_10": bench_applications,
+        "batch": bench_batch,
         "lm": bench_lm_step,
     }
     print("name,us_per_call,derived")

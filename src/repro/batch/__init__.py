@@ -1,0 +1,7 @@
+"""Batched multi-integrand engine: vmapped on-device VEGAS+ (DESIGN.md §6)."""
+
+from .cache import MapCache  # noqa: F401
+from .engine import BatchResult, run_batch, run_serial  # noqa: F401
+from .family import (FAMILIES, IntegrandFamily,  # noqa: F401
+                     make_asian_family, make_gaussian_family,
+                     make_ridge_family)

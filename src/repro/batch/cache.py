@@ -1,0 +1,69 @@
+"""Warm-start map cache: amortize adaptation across sweeps (DESIGN.md B3).
+
+The expensive part of a VEGAS+ run is the early iterations that mold the
+importance map; the map itself is O(d·ninc) and mesh-free.  A sweep service
+that repeatedly integrates the same family (new strikes, more precision,
+fresh seeds) can therefore skip the cold start: cache the converged
+``VegasState.edges`` keyed by (family, resolved config) and seed the next
+batch run with them — the serving-style amortization the batch engine's
+``cache=`` argument wires in.
+
+Storage is an in-memory dict with optional ``.npz`` persistence (same
+plain-numpy-inspectable philosophy as ``dist.checkpoint``).  Entries are
+per-scenario ``(B, d, ninc+1)`` arrays; the key pins family name, batch
+size, and every config field that changes map geometry or adaptation, so a
+hit is always shape- and semantics-compatible.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def cache_key(family, rcfg) -> str:
+    """Cache key pinning family identity + map-relevant config fields."""
+    return (f"{family.name}.B{family.batch_size}.d{rcfg.dim}"
+            f".ninc{rcfg.ninc}.ns{rcfg.nstrat}.a{rcfg.alpha}.b{rcfg.beta}")
+
+
+class MapCache:
+    """In-memory map cache with optional on-disk ``.npz`` persistence."""
+
+    def __init__(self, path: str | None = None):
+        self.path = path
+        self._mem: dict[str, np.ndarray] = {}
+        if path is not None and os.path.exists(path):
+            with np.load(path) as z:
+                self._mem = {k: z[k] for k in z.files}
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+    def get(self, family, rcfg):
+        """Cached converged edges ``(B, d, ninc+1)`` for this (family,
+        config), or ``None`` on a miss."""
+        arr = self._mem.get(cache_key(family, rcfg))
+        if arr is None:
+            return None
+        return jnp.asarray(arr, jnp.dtype(rcfg.dtype))
+
+    def put(self, family, rcfg, edges) -> None:
+        """Store converged edges (any array-like ``(B, d, ninc+1)``)."""
+        arr = np.asarray(edges)
+        expected = (family.batch_size, rcfg.dim, rcfg.ninc + 1)
+        assert arr.shape == expected, (arr.shape, expected)
+        self._mem[cache_key(family, rcfg)] = arr
+        if self.path is not None:
+            self._flush()
+
+    def _flush(self) -> None:
+        # Atomic write, same pattern as dist.checkpoint: complete or absent.
+        tmp = self.path + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez(f, **self._mem)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.path)

@@ -1,0 +1,126 @@
+"""Batched multi-integrand engine: one XLA program, B scenarios.
+
+``run_batch`` lifts the single-scenario on-device iteration loop
+(``core.integrator.run_loop``, DESIGN.md B1) over the batch axis of an
+:class:`~repro.batch.family.IntegrandFamily` with ``jax.vmap`` (B2): B
+parameterized integrands draw, adapt their importance maps, re-allocate
+their stratifications, and aggregate — concurrently, inside a single jitted
+program with zero host round-trips.  This is the throughput shape the
+ROADMAP's "as many scenarios as you can imagine" asks for: the accelerator
+sees one big batched fill instead of B small sequential ones, so the
+batched wall clock beats the serial loop (benchmarks/bench_batch.py).
+
+Per-scenario RNG: scenario ``b`` runs from ``fold_in(key, b)``, so its
+stream is exactly what a serial ``core.run(family.instance(b), cfg,
+key=fold_in(key, b))`` would draw — batched and serial results agree to
+vmap-layout numerics (tests/test_batch.py checks 3 combined sigma).
+
+Warm start: pass a ``cache.MapCache`` to seed every scenario's map with the
+previously converged edges for this (family, config) and to store the new
+converged maps after the run (B3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import integrator as core
+from repro.core import map as vmap_
+from .cache import MapCache
+from .family import IntegrandFamily
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchResult:
+    """Per-scenario results of a batched run (arrays of leading dim B)."""
+    mean: np.ndarray        # (B,)
+    sdev: np.ndarray        # (B,)
+    chi2_dof: np.ndarray    # (B,)
+    n_used: np.ndarray      # (B,) iterations entering each combination
+    iter_means: np.ndarray  # (B, max_it)
+    iter_sdevs: np.ndarray  # (B, max_it)
+    states: core.VegasState  # batched pytree: every leaf has leading dim B
+    warm_started: bool = False
+
+    @property
+    def batch_size(self) -> int:
+        return self.mean.shape[0]
+
+    def __repr__(self):
+        lines = [f"BatchResult(B={self.batch_size}, "
+                 f"warm_started={self.warm_started})"]
+        for b in range(self.batch_size):
+            lines.append(f"  [{b}] {self.mean[b]:.8g} +- {self.sdev[b]:.3g} "
+                         f"(chi2/dof {self.chi2_dof[b]:.2f})")
+        return "\n".join(lines)
+
+
+def scenario_keys(key, batch_size: int) -> jax.Array:
+    """Independent per-scenario base keys: ``fold_in(key, b)`` (the batch
+    analogue of the chunk-keyed RNG contract, DESIGN.md C5)."""
+    return jax.vmap(lambda b: jax.random.fold_in(key, b))(
+        jnp.arange(batch_size))
+
+
+def _batched_program(family: IntegrandFamily, cfg: core.ResolvedConfig):
+    """Build the jitted vmapped whole-run program for one family/config."""
+
+    def one(params, key_b, edges0):
+        ig = family.bind(params)
+        st = core.init_state(ig, cfg, key_b)
+        st = core.VegasState(edges0, st.n_h, st.key, st.it, st.results)
+        st = core.run_loop(st, ig, cfg, 0)
+        mean, sdev, chi2_dof, n_used = core.combine_results(
+            st.results, cfg.skip, cfg.max_it)
+        return st, mean, sdev, chi2_dof, n_used
+
+    return jax.jit(jax.vmap(one))
+
+
+def run_batch(family: IntegrandFamily, cfg: core.VegasConfig | None = None, *,
+              key=None, cache: MapCache | None = None) -> BatchResult:
+    """Integrate all B scenarios of ``family`` in one jitted program.
+
+    The per-iteration estimates, adaptation, and the final inverse-variance
+    combination all happen on device; the host sees only the O(B·KB) result
+    pytree once, after the loop.  ``cache`` (optional) warm-starts every
+    scenario's importance map from the last converged run of the same
+    (family, config) and refreshes the cache afterwards.
+    """
+    rcfg = (cfg or core.VegasConfig()).resolve(family.dim)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    b = family.batch_size
+
+    edges0 = cache.get(family, rcfg) if cache is not None else None
+    warm = edges0 is not None
+    if edges0 is None:
+        uni = vmap_.uniform_edges(family.lower, family.upper, rcfg.ninc,
+                                  jnp.dtype(rcfg.dtype))
+        edges0 = jnp.broadcast_to(uni, (b,) + uni.shape)
+
+    prog = _batched_program(family, rcfg)
+    states, mean, sdev, chi2_dof, n_used = prog(
+        family.params, scenario_keys(key, b), edges0)
+
+    if cache is not None:
+        cache.put(family, rcfg, states.edges)
+
+    sig2 = np.asarray(states.results[:, :, 1])
+    return BatchResult(np.asarray(mean), np.asarray(sdev),
+                       np.asarray(chi2_dof), np.asarray(n_used),
+                       np.asarray(states.results[:, :, 0]), np.sqrt(sig2),
+                       states, warm_started=warm)
+
+
+def run_serial(family: IntegrandFamily, cfg: core.VegasConfig | None = None, *,
+               key=None) -> list[core.VegasResult]:
+    """The B scenarios as B independent ``core.run`` calls — the baseline the
+    batched engine is measured against (same per-scenario keys)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return [core.run(family.instance(b), cfg,
+                     key=jax.random.fold_in(key, b))
+            for b in range(family.batch_size)]

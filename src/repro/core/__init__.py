@@ -1,4 +1,5 @@
 """VEGAS+ core: the paper's contribution as a composable JAX module."""
 
 from .integrands import Integrand, table3_suite  # noqa: F401
-from .integrator import VegasConfig, VegasResult, VegasState, run  # noqa: F401
+from .integrator import (VegasConfig, VegasResult, VegasState,  # noqa: F401
+                         run, run_loop)

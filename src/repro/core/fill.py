@@ -113,12 +113,12 @@ def fill_reference(edges, n_h, key, integrand, *, nstrat: int, n_cap: int,
 
 def fill_pallas(edges, n_h, key, integrand, *, nstrat: int, n_cap: int,
                 chunk: int, dtype=jnp.float32, interpret: bool = True,
-                fused_cubes: bool = False) -> FillResult:
+                fused_cubes: bool = False, tile: int = 256) -> FillResult:
     """Pallas-kernel fill: transform/eval/map-hist inside the kernel."""
     from repro.kernels import ops as kops
     return kops.fill(edges, n_h, key, integrand, nstrat=nstrat, n_cap=n_cap,
                      chunk=chunk, dtype=dtype, interpret=interpret,
-                     fused_cubes=fused_cubes)
+                     fused_cubes=fused_cubes, tile=tile)
 
 
 BACKENDS = {"ref": fill_reference, "pallas": fill_pallas}

@@ -133,18 +133,41 @@ def iteration_step(state: VegasState, integrand: Integrand,
 
 def combine_results(results: jax.Array, skip: int, n_done: int):
     """Inverse-variance weighted combination across iterations (eq. (8)-(9))
-    plus the chi^2/dof consistency diagnostic vegas reports."""
+    plus the chi^2/dof consistency diagnostic vegas reports.
+
+    Degenerate case: when no iteration is usable (every sig2 is inf or
+    non-finite, so ``wsum == 0``) the result is the NaN-free sentinel
+    ``(0.0, inf, 0.0, 0)`` — zero information, not a silent NaN.
+    """
     means, sig2 = results[:, 0], results[:, 1]
     idx = jnp.arange(results.shape[0])
     use = (idx >= skip) & (idx < n_done) & jnp.isfinite(sig2) & (sig2 > 0)
     wts = jnp.where(use, 1.0 / jnp.where(use, sig2, 1.0), 0.0)
     wsum = jnp.sum(wts)
-    mean = jnp.sum(wts * means) / wsum
-    var = 1.0 / wsum
+    any_used = wsum > 0
+    mean = jnp.where(any_used,
+                     jnp.sum(wts * means) / jnp.where(any_used, wsum, 1.0), 0.0)
+    var = 1.0 / wsum  # inf when nothing was usable (nan-free)
     n_used = jnp.sum(use)
     chi2 = jnp.sum(jnp.where(use, wts * (means - mean) ** 2, 0.0))
-    chi2_dof = chi2 / jnp.maximum(n_used - 1, 1)
+    chi2_dof = jnp.where(any_used, chi2 / jnp.maximum(n_used - 1, 1), 0.0)
     return mean, jnp.sqrt(var), chi2_dof, n_used
+
+
+def run_loop(state: VegasState, integrand: Integrand, cfg: ResolvedConfig,
+             start: int, fill_fn=None) -> VegasState:
+    """The whole iteration loop as one traced program: ``lax.fori_loop`` over
+    :func:`iteration_step` from ``start`` to ``cfg.max_it``.
+
+    This is the jitted single-program path of ``run`` (no host sync between
+    iterations, DESIGN.md B1) and the unit the batch engine ``vmap``s over
+    scenarios (``repro.batch.engine``).  ``iteration_step`` keys its RNG and
+    results slot off ``state.it``, so looping over it is bit-identical to
+    stepping it from a host loop (checked by tests/test_determinism.py).
+    """
+    return jax.lax.fori_loop(
+        start, cfg.max_it,
+        lambda _, s: iteration_step(s, integrand, cfg, fill_fn), state)
 
 
 def run(integrand: Integrand, cfg: VegasConfig | None = None, *,
@@ -154,12 +177,14 @@ def run(integrand: Integrand, cfg: VegasConfig | None = None, *,
 
     ``fill_fn(edges, n_h, key_it, integrand) -> FillResult`` overrides the
     configured backend — ``dist.sharded_fill.make_sharded_fill`` builds the
-    multi-device one.  ``checkpoint_cb(it, state)`` is invoked after every
-    iteration (the loop's only host sync; DESIGN.md §5.3) — pass
-    ``lambda it, s: mgr.save(it, s)`` with a ``dist.checkpoint
-    .CheckpointManager`` for fault tolerance; resume by passing the restored
-    ``state`` (the results buffer grows automatically if the resuming config
-    has a larger ``max_it``).
+    multi-device one.  With no ``checkpoint_cb`` the whole loop executes as a
+    single jitted on-device program (``run_loop``): zero host round-trips
+    between iterations.  ``checkpoint_cb(it, state)`` switches to a host-side
+    loop that invokes the callback after every iteration (the loop's only
+    host sync; DESIGN.md §5.3) — pass ``lambda it, s: mgr.save(it, s)`` with
+    a ``dist.checkpoint.CheckpointManager`` for fault tolerance; resume by
+    passing the restored ``state`` (the results buffer grows automatically if
+    the resuming config has a larger ``max_it``).
     """
     cfg = (cfg or VegasConfig()).resolve(integrand.dim)
     key = key if key is not None else jax.random.PRNGKey(0)
@@ -176,14 +201,19 @@ def run(integrand: Integrand, cfg: VegasConfig | None = None, *,
         state = VegasState(state.edges, state.n_h, state.key, state.it,
                            jnp.concatenate([state.results, filler]))
 
-    step = jax.jit(functools.partial(
-        iteration_step, integrand=integrand, cfg=cfg, fill_fn=fill_fn),
-        donate_argnums=0)
-
     start = int(state.it)
-    for it in range(start, cfg.max_it):
-        state = step(state)
-        if checkpoint_cb is not None:
+    if checkpoint_cb is None:
+        # On-device loop: one jitted program for the whole run.
+        prog = jax.jit(functools.partial(
+            run_loop, integrand=integrand, cfg=cfg, start=start,
+            fill_fn=fill_fn), donate_argnums=0)
+        state = prog(state)
+    else:
+        step = jax.jit(functools.partial(
+            iteration_step, integrand=integrand, cfg=cfg, fill_fn=fill_fn),
+            donate_argnums=0)
+        for it in range(start, cfg.max_it):
+            state = step(state)
             jax.block_until_ready(state.results)
             checkpoint_cb(it, state)
 

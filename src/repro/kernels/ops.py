@@ -30,12 +30,23 @@ def fill(edges, n_h, key, integrand, *, nstrat: int, n_cap: int, chunk: int,
     d = edges.shape[0]
     ninc = edges.shape[1] - 1
     n_cubes = n_h.shape[0]
-    assert chunk % tile == 0 or chunk < tile, (chunk, tile)
     if n_chunks is None:
         assert n_cap % chunk == 0, (n_cap, chunk)
         n_chunks = n_cap // chunk
     n_local = n_chunks * chunk
     tile = min(tile, n_local)
+    if n_local % tile != 0:
+        # Non-power-of-two chunk shapes: the Pallas grid needs tile | n_local.
+        # chunk always divides n_local (= n_chunks * chunk), so fall back to
+        # the largest divisor of chunk that fits the requested tile.
+        cap = min(tile, chunk)
+        tile = next(t for t in range(cap, 0, -1) if chunk % t == 0)
+        if tile < min(8, chunk):
+            # e.g. a prime chunk: the only divisor is 1, which would explode
+            # the sequential grid (catastrophic under interpret mode).
+            raise ValueError(
+                f"chunk={chunk} has no usable tile divisor <= {cap}; "
+                f"pick a chunk with a divisor >= 8 (or a tile dividing it)")
 
     gchunks = start_chunk + jnp.arange(n_chunks)
     keys = jax.vmap(lambda g: jax.random.fold_in(key, g))(gchunks)

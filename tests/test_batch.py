@@ -1,0 +1,115 @@
+"""Batched multi-integrand engine: batched-vs-serial agreement, single-program
+execution, and the warm-start map cache (ISSUE 2 acceptance criteria)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.batch import MapCache, run_batch, run_serial
+from repro.batch.family import (make_asian_family, make_gaussian_family,
+                                make_ridge_family)
+from repro.core import VegasConfig
+
+FAST = VegasConfig(neval=16_000, max_it=8, skip=3, ninc=64, chunk=4096)
+
+
+def test_batched_matches_serial_within_3_sigma_b8():
+    """Acceptance: B=8 batched run matches 8 serial ``run()`` calls within 3
+    combined sigma per scenario (same per-scenario keys)."""
+    fam = make_gaussian_family(np.linspace(0.15, 0.85, 8))
+    key = jax.random.PRNGKey(42)
+    batched = run_batch(fam, FAST, key=key)
+    serial = run_serial(fam, FAST, key=key)
+    for b in range(8):
+        comb = float(np.hypot(batched.sdev[b], serial[b].sdev))
+        gap = abs(float(batched.mean[b]) - serial[b].mean)
+        assert gap < 3 * comb, (b, batched.mean[b], serial[b].mean, comb)
+
+
+def test_batched_scenarios_converge_to_targets():
+    fam = make_gaussian_family(np.linspace(0.25, 0.75, 4))
+    res = run_batch(fam, FAST, key=jax.random.PRNGKey(7))
+    pulls = (res.mean - fam.targets) / res.sdev
+    assert (np.abs(pulls) < 5).all(), pulls
+    assert (res.n_used == FAST.max_it - FAST.skip).all()
+
+
+def test_asian_family_matches_closed_form():
+    fam = make_asian_family(np.linspace(90.0, 110.0, 4), n_steps=8,
+                            geometric=True)
+    cfg = VegasConfig(neval=30_000, max_it=8, skip=3, ninc=128, chunk=8192)
+    res = run_batch(fam, cfg, key=jax.random.PRNGKey(3))
+    pulls = (res.mean - fam.targets) / res.sdev
+    assert (np.abs(pulls) < 5).all(), pulls
+
+
+def test_ridge_family_orientations_have_targets():
+    dirs = np.array([[1.0, 1.0, 1.0], [0.6, 0.8, 1.0]])
+    fam = make_ridge_family(dirs, dim=3, n_peaks=20)
+    cfg = VegasConfig(neval=30_000, max_it=8, skip=3, ninc=64, chunk=8192)
+    res = run_batch(fam, cfg, key=jax.random.PRNGKey(9))
+    pulls = (res.mean - fam.targets) / res.sdev
+    assert (np.abs(pulls) < 5).all(), pulls
+
+
+def test_batched_run_is_single_jitted_program(monkeypatch):
+    """No per-iteration host sync: the engine must hand XLA ONE program —
+    ``iteration_step`` is traced (constant-folded into the loop), never
+    executed eagerly, and the program runs once."""
+    from repro.core import integrator as core
+
+    calls = {"trace": 0}
+    real_step = core.iteration_step
+
+    def counting_step(*a, **k):
+        calls["trace"] += 1
+        return real_step(*a, **k)
+
+    monkeypatch.setattr(core, "iteration_step", counting_step)
+    fam = make_gaussian_family(np.array([0.3, 0.7]))
+    run_batch(fam, FAST, key=jax.random.PRNGKey(0))
+    # Traced exactly once (inside fori_loop tracing), not max_it times.
+    assert calls["trace"] == 1, calls
+
+
+def test_family_instance_matches_batched_fn():
+    fam = make_gaussian_family(np.array([0.3, 0.6]))
+    x = jax.random.uniform(jax.random.PRNGKey(0), (32, fam.dim))
+    for b in range(2):
+        ig = fam.instance(b)
+        np.testing.assert_allclose(
+            ig(x), fam.fn(jax.tree.map(lambda l: l[b], fam.params), x),
+            rtol=1e-6)
+        assert ig.target == pytest.approx(float(fam.targets[b]))
+
+
+def test_map_cache_roundtrip_and_warm_start(tmp_path):
+    fam = make_gaussian_family(np.array([0.3, 0.7]))
+    path = str(tmp_path / "maps.npz")
+    cache = MapCache(path)
+    r1 = run_batch(fam, FAST, key=jax.random.PRNGKey(1), cache=cache)
+    assert not r1.warm_started
+    assert len(cache) == 1
+
+    # Fresh cache object from disk: the entry persists and warm-starts.
+    cache2 = MapCache(path)
+    assert len(cache2) == 1
+    r2 = run_batch(fam, FAST, key=jax.random.PRNGKey(2), cache=cache2)
+    assert r2.warm_started
+    pulls = (r2.mean - fam.targets) / r2.sdev
+    assert (np.abs(pulls) < 5).all()
+
+    # Different config (ninc) must miss — geometry is part of the key.
+    other = VegasConfig(neval=16_000, max_it=8, skip=3, ninc=32, chunk=4096)
+    assert cache2.get(fam, other.resolve(fam.dim)) is None
+
+
+def test_warm_start_edges_are_the_converged_maps():
+    fam = make_gaussian_family(np.array([0.4, 0.6]))
+    cache = MapCache()
+    r1 = run_batch(fam, FAST, key=jax.random.PRNGKey(1), cache=cache)
+    stored = cache.get(fam, FAST.resolve(fam.dim))
+    np.testing.assert_allclose(np.asarray(stored),
+                               np.asarray(r1.states.edges), rtol=1e-6)
+    assert (jnp.diff(stored, axis=-1) > 0).all()  # still a valid map

@@ -1,0 +1,96 @@
+"""Determinism + resume regressions for the two loop paths.
+
+``run`` executes either as one jitted on-device ``fori_loop`` program
+(default) or as a host-side loop (when ``checkpoint_cb`` is set); both must
+be bit-deterministic, agree with each other, and compose with
+checkpoint-resume under a larger ``max_it``."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import VegasConfig, run
+from repro.core import integrands as igs
+
+CFG = VegasConfig(neval=12_000, max_it=6, skip=2, ninc=32, chunk=4096)
+KEY = jax.random.PRNGKey(21)
+
+
+def _host_loop_run(ig, cfg, key, state=None):
+    # any checkpoint_cb forces the per-iteration host loop
+    return run(ig, cfg, key=key, state=state, checkpoint_cb=lambda it, s: None)
+
+
+def test_fori_loop_path_bit_deterministic():
+    ig = igs.make_cosine(dim=3)
+    r1 = run(ig, CFG, key=KEY)
+    r2 = run(ig, CFG, key=KEY)
+    assert r1.mean == r2.mean  # bit-identical, not approx
+    assert r1.sdev == r2.sdev
+    np.testing.assert_array_equal(np.asarray(r1.state.results),
+                                  np.asarray(r2.state.results))
+
+
+def test_host_loop_path_bit_deterministic():
+    ig = igs.make_cosine(dim=3)
+    r1 = _host_loop_run(ig, CFG, KEY)
+    r2 = _host_loop_run(ig, CFG, KEY)
+    assert r1.mean == r2.mean
+    assert r1.sdev == r2.sdev
+
+
+def test_fori_loop_matches_host_loop_bitwise():
+    """The on-device loop is the same program as the stepped host loop: the
+    per-iteration results must agree bitwise (checked on CPU; both paths
+    fold the same per-iteration keys and run the same iteration_step)."""
+    ig = igs.make_gaussian(dim=2, sigma=0.1)
+    r_fori = run(ig, CFG, key=KEY)
+    r_host = _host_loop_run(ig, CFG, KEY)
+    np.testing.assert_array_equal(np.asarray(r_fori.state.results),
+                                  np.asarray(r_host.state.results))
+    np.testing.assert_array_equal(np.asarray(r_fori.state.edges),
+                                  np.asarray(r_host.state.edges))
+    assert r_fori.mean == r_host.mean
+
+
+def test_resume_with_larger_max_it_matches_uninterrupted():
+    """Checkpoint after 3 of 8 iterations, resume under max_it=8: identical
+    to the uninterrupted 8-iteration run — on BOTH loop paths."""
+    ig = igs.make_cosine(dim=4)
+    kw = dict(neval=12_000, skip=2, ninc=32, chunk=4096)
+    full = run(ig, VegasConfig(max_it=8, **kw), key=KEY)
+
+    saved = {}
+    run(ig, VegasConfig(max_it=3, **kw), key=KEY,
+        checkpoint_cb=lambda it, s: saved.__setitem__("state", s))
+
+    resumed_fori = run(ig, VegasConfig(max_it=8, **kw), key=KEY,
+                       state=saved["state"])
+    assert resumed_fori.mean == pytest.approx(full.mean, rel=1e-6)
+    assert resumed_fori.sdev == pytest.approx(full.sdev, rel=1e-6)
+
+    resumed_host = _host_loop_run(ig, VegasConfig(max_it=8, **kw), KEY,
+                                  state=saved["state"])
+    assert resumed_host.mean == pytest.approx(full.mean, rel=1e-6)
+
+
+def test_resume_state_not_mutated_by_donation():
+    """run() donates its working state to the jitted program; the caller's
+    state object must survive for a second resume."""
+    ig = igs.make_cosine(dim=3)
+    half = run(ig, VegasConfig(neval=12_000, max_it=3, skip=1, ninc=32,
+                               chunk=4096), key=KEY)
+    cfg8 = VegasConfig(neval=12_000, max_it=6, skip=1, ninc=32, chunk=4096)
+    r1 = run(ig, cfg8, key=KEY, state=half.state)
+    r2 = run(ig, cfg8, key=KEY, state=half.state)  # state still alive
+    assert r1.mean == r2.mean
+
+
+def test_batched_engine_bit_deterministic():
+    from repro.batch import run_batch
+    from repro.batch.family import make_gaussian_family
+    fam = make_gaussian_family(np.array([0.3, 0.7]))
+    r1 = run_batch(fam, CFG, key=KEY)
+    r2 = run_batch(fam, CFG, key=KEY)
+    np.testing.assert_array_equal(r1.mean, r2.mean)
+    np.testing.assert_array_equal(r1.sdev, r2.sdev)

@@ -58,6 +58,29 @@ def test_iteration_aggregation_weights_by_variance():
     assert int(n) == 2
 
 
+def test_combine_results_all_unusable_is_nan_free():
+    """Every iteration has inf/non-finite sig2 (wsum == 0): the combination
+    must return the (0.0, inf, 0.0, 0) sentinel, never NaN."""
+    from repro.core.integrator import combine_results
+    for bad in (np.inf, np.nan, 0.0):
+        res = jnp.array([[1.0, bad], [2.0, bad], [3.0, bad]])
+        mean, sdev, chi2, n = combine_results(res, skip=0, n_done=3)
+        assert float(mean) == 0.0
+        assert float(sdev) == np.inf
+        assert float(chi2) == 0.0
+        assert int(n) == 0
+        assert not np.isnan(float(mean))
+        assert not np.isnan(float(chi2))
+
+
+def test_combine_results_skip_beyond_n_done_is_nan_free():
+    from repro.core.integrator import combine_results
+    res = jnp.array([[1.0, 1e-4], [2.0, 1e-4]])
+    mean, sdev, chi2, n = combine_results(res, skip=5, n_done=2)
+    assert (float(mean), float(chi2), int(n)) == (0.0, 0.0, 0)
+    assert float(sdev) == np.inf
+
+
 def test_skip_excludes_warmup():
     from repro.core.integrator import combine_results
     res = jnp.array([[100.0, 1e-6], [1.0, 1e-4], [1.0, 1e-4]])

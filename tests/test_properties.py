@@ -1,0 +1,125 @@
+"""Property-based tests (hypothesis) for the aggregation layer:
+``combine_results`` (inverse-variance weighting) and ``estimate_from_cubes``
+(per-iteration estimate + stratification signal)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# Property tests need hypothesis (requirements-dev.txt); skip the module —
+# not the whole collection — where it is absent.
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.fill import FillResult, estimate_from_cubes  # noqa: E402
+from repro.core.integrator import combine_results  # noqa: E402
+
+
+def _results(means, sig2):
+    return jnp.stack([jnp.asarray(means, jnp.float32),
+                      jnp.asarray(sig2, jnp.float32)], axis=1)
+
+
+means_st = st.lists(st.floats(-100.0, 100.0), min_size=1, max_size=12)
+sig2_st = st.floats(1e-6, 1e3)
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_combine_results_permutation_invariant(data):
+    """With skip=0 and every iteration used, the combination is a weighted
+    mean — permuting the iterations must not change it."""
+    means = data.draw(means_st)
+    n = len(means)
+    sig2 = [data.draw(sig2_st) for _ in range(n)]
+    perm = data.draw(st.permutations(range(n)))
+    m0, s0, _, n0 = combine_results(_results(means, sig2), 0, n)
+    mp, sp, _, np_ = combine_results(
+        _results([means[i] for i in perm], [sig2[i] for i in perm]), 0, n)
+    assert int(n0) == int(np_) == n
+    assert float(mp) == pytest.approx(float(m0), rel=1e-4, abs=1e-5)
+    assert float(sp) == pytest.approx(float(s0), rel=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_combine_results_skip_masks_out_warmup(data):
+    """Iterations before ``skip`` (and at/after ``n_done``) must not affect
+    the result — replace them with arbitrary garbage and nothing changes."""
+    means = data.draw(st.lists(st.floats(-100.0, 100.0), min_size=3,
+                               max_size=10))
+    n = len(means)
+    sig2 = [data.draw(sig2_st) for _ in range(n)]
+    skip = data.draw(st.integers(0, n - 1))
+    n_done = data.draw(st.integers(skip + 1, n))
+    garbage_mean = data.draw(st.floats(-1e6, 1e6))
+    garbage_sig2 = data.draw(st.floats(1e-9, 1e9))
+    means2, sig22 = list(means), list(sig2)
+    for i in list(range(skip)) + list(range(n_done, n)):
+        means2[i], sig22[i] = garbage_mean, garbage_sig2
+    a = combine_results(_results(means, sig2), skip, n_done)
+    b = combine_results(_results(means2, sig22), skip, n_done)
+    assert float(a[0]) == pytest.approx(float(b[0]), rel=1e-6)
+    assert float(a[1]) == pytest.approx(float(b[1]), rel=1e-6)
+    assert int(a[3]) == int(b[3]) == n_done - skip
+
+
+@settings(max_examples=40, deadline=None)
+@given(mean=st.floats(-100.0, 100.0), sig2=sig2_st,
+       pad=st.integers(0, 6))
+def test_combine_results_single_iteration_identity(mean, sig2, pad):
+    """One usable iteration: the combination IS that iteration (and chi2,
+    with zero degrees of freedom, is 0)."""
+    res = _results([mean] + [0.0] * pad, [sig2] + [np.inf] * pad)
+    m, s, chi2, n = combine_results(res, 0, 1 + pad)
+    assert int(n) == 1
+    assert float(m) == pytest.approx(mean, rel=1e-5, abs=1e-6)
+    assert float(s) == pytest.approx(float(np.sqrt(sig2)), rel=1e-5)
+    # chi2 = (mean - m)^2 / sig2 amplifies the ~1-ulp f32 error of the
+    # combined mean by 1/sig2; scale the "zero" tolerance accordingly.
+    tol = 100.0 * (1.2e-7 * max(abs(mean), 1.0)) ** 2 / sig2
+    assert float(chi2) == pytest.approx(0.0, abs=max(tol, 1e-6))
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_estimate_from_cubes_variance_nonnegative(data):
+    """sigma2 and every d_h are >= 0 and finite for any accumulator state
+    with s2 >= s1^2/n (Cauchy-Schwarz, true of any real sample)."""
+    n_cubes = data.draw(st.integers(1, 32))
+    nh = np.array(data.draw(st.lists(st.integers(1, 50), min_size=n_cubes,
+                                     max_size=n_cubes)), np.float32)
+    s1 = np.array(data.draw(st.lists(st.floats(-10.0, 10.0),
+                                     min_size=n_cubes, max_size=n_cubes)),
+                  np.float32)
+    # s2 >= s1^2 / n_h + slack: realizable second moments
+    slack = np.array(data.draw(st.lists(st.floats(0.0, 10.0),
+                                        min_size=n_cubes, max_size=n_cubes)),
+                     np.float32)
+    s2 = s1 * s1 / nh + slack
+    res = FillResult(jnp.zeros((1, 4)), jnp.zeros((1, 4)),
+                     jnp.asarray(s1), jnp.asarray(s2))
+    i_it, sigma2, d_h = estimate_from_cubes(res, jnp.asarray(nh, jnp.int32))
+    assert np.isfinite(float(i_it))
+    assert float(sigma2) >= 0.0
+    assert (np.asarray(d_h) >= 0.0).all()
+    assert np.isfinite(np.asarray(d_h)).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(c=st.floats(-5.0, 5.0), n_cubes=st.integers(1, 64),
+       per_cube=st.integers(2, 20))
+def test_estimate_from_cubes_constant_integrand_zero_variance(c, n_cubes,
+                                                              per_cube):
+    """A constant weight w=c in every cube: the estimate is exact (= c), the
+    variance is exactly 0, and the stratification signal d_h is all-zero."""
+    nh = jnp.full((n_cubes,), per_cube, jnp.int32)
+    s1 = jnp.full((n_cubes,), c * per_cube, jnp.float32)
+    s2 = jnp.full((n_cubes,), c * c * per_cube, jnp.float32)
+    res = FillResult(jnp.zeros((1, 4)), jnp.zeros((1, 4)), s1, s2)
+    i_it, sigma2, d_h = estimate_from_cubes(res, nh)
+    # zero up to f32 rounding of the moments, whose natural scale is c^2
+    assert float(i_it) == pytest.approx(c, rel=1e-4, abs=1e-6)
+    assert float(sigma2) == pytest.approx(0.0, abs=1e-5 * max(c * c, 1.0))
+    np.testing.assert_allclose(np.asarray(d_h), 0.0,
+                               atol=2e-3 * max(abs(c), 1.0))
