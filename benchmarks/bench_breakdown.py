@@ -4,6 +4,14 @@ intensive (Ridge) integrand, across n_eval scales.
 
 cuVegas' finding: fill dominates (36-99%) and grows with n_eval; everything
 else amortizes.  Same decomposition measured on the JAX engine.
+
+This module also carries the fill perf trajectory (DESIGN.md §7): the
+``.../fill_pallas`` vs ``.../fill_fused`` rows time the P-V2 baseline kernel
+against the P-V3 streaming kernel at the smoke shapes — the numbers behind
+BENCH_fill.json and the CI bench gate (``benchmarks.run --gate-fill``).
+The pallas comparison uses closure-free integrands only: a traced integrand
+that captures arrays (e.g. ridge's peak table) cannot be inlined into a
+pallas kernel body.
 """
 
 from __future__ import annotations
@@ -17,8 +25,8 @@ from repro.core import integrator as I
 from repro.core import fill as F
 from repro.core import map as vmap_
 from repro.core import strat
-from repro.core.integrands import make_ridge, make_roos_arnold
-from .common import emit
+from repro.core.integrands import make_cosine, make_ridge, make_roos_arnold
+from .common import emit, timeit
 
 
 def _sections(ig, neval):
@@ -58,6 +66,28 @@ def _sections(ig, neval):
                 total=total)
 
 
+def _fill_backends(ig, neval, ninc=1024):
+    """Time the three fill implementations on identical (edges, n_h, key):
+    reference, pallas baseline (P-V2), pallas fused (P-V3).  Tiles come from
+    the VMEM-budget autotuner; interpret mode resolves per platform."""
+    cfg = I.VegasConfig(neval=neval, ninc=ninc,
+                        chunk=min(neval, 1 << 14)).resolve(ig.dim)
+    state = I.init_state(ig, cfg, jax.random.PRNGKey(0))
+    key = jax.random.fold_in(state.key, 0)
+
+    def jitted(fn, **kw):
+        return jax.jit(functools.partial(
+            fn, integrand=ig, nstrat=cfg.nstrat, n_cap=cfg.n_cap,
+            chunk=cfg.chunk, **kw))
+
+    t_ref = timeit(jitted(F.fill_reference), state.edges, state.n_h, key)
+    t_base = timeit(jitted(F.fill_pallas, fused_cubes=False),
+                    state.edges, state.n_h, key)
+    t_fused = timeit(jitted(F.fill_pallas, fused_cubes=True),
+                     state.edges, state.n_h, key)
+    return t_ref, t_base, t_fused
+
+
 def run(fast=True):
     evals = [10**5, 10**6] if fast else [10**5, 10**6, 10**7]
     for name, mk in [("roos_arnold", make_roos_arnold),
@@ -68,7 +98,21 @@ def run(fast=True):
             pct = {k: 100 * v / s["total"] for k, v in s.items() if k != "total"}
             emit(f"table1/{name}/neval={ne:.0e}/fill", s["fill"],
                  f"fill%={pct['fill']:.1f} init%={pct['init']:.1f} "
-                 f"update%={pct['update']:.1f} results%={pct['results']:.1f}")
+                 f"update%={pct['update']:.1f} results%={pct['results']:.1f}",
+                 n_eval=ne, backend="ref")
+
+    # Fill perf trajectory: P-V2 baseline vs P-V3 fused at the smoke shapes
+    # (full mode adds a second n_eval decade).
+    pallas_evals = [10**5] if fast else [10**5, 10**6]
+    for name, ig in [("roos_arnold", make_roos_arnold()),
+                     ("cosine_d6", make_cosine(dim=6))]:
+        for ne in pallas_evals:
+            t_ref, t_base, t_fused = _fill_backends(ig, ne)
+            emit(f"table1/{name}/neval={ne:.0e}/fill_pallas", t_base,
+                 f"vs_ref={t_ref / t_base:.3f}x", n_eval=ne, backend="pallas")
+            emit(f"table1/{name}/neval={ne:.0e}/fill_fused", t_fused,
+                 f"speedup_vs_pallas={t_base / t_fused:.2f}x",
+                 n_eval=ne, backend="pallas_fused")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,29 @@
-"""Shared benchmark utilities: timing + CSV output."""
+"""Shared benchmark utilities: timing, CSV output, and machine-readable row
+collection for ``benchmarks.run --json`` (the perf-trajectory artifact)."""
 
 from __future__ import annotations
 
+import subprocess
 import time
 
 import jax
+
+# Every emit() appends here; benchmarks/run.py serializes the list (plus run
+# metadata) to --json and extracts the fill rows into BENCH_fill.json.
+ROWS: list[dict] = []
+
+
+def reset_rows() -> None:
+    ROWS.clear()
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.run(["git", "rev-parse", "--short=12", "HEAD"],
+                              capture_output=True, text=True,
+                              timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
 
 
 def timeit(fn, *args, repeats=3, warmup=1):
@@ -20,6 +39,12 @@ def timeit(fn, *args, repeats=3, warmup=1):
     return ts[len(ts) // 2]
 
 
-def emit(name: str, seconds: float, derived: str = ""):
-    """One CSV row: name,us_per_call,derived."""
+def emit(name: str, seconds: float, derived: str = "", **fields):
+    """One CSV row ``name,us_per_call,derived`` + a structured record.
+
+    Extra keyword fields (``n_eval=...``, ``backend=...``) go into the JSON
+    record only — the CSV format is unchanged.
+    """
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+    ROWS.append({"name": name, "us_per_call": round(seconds * 1e6, 1),
+                 "derived": derived, **fields})

@@ -1,23 +1,65 @@
 """Benchmark harness: one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--only fig8,table1,...]
+      [--json OUT.json] [--gate-fill]
 
 Prints ``name,us_per_call,derived`` CSV rows.  Default (fast) mode scales
 n_eval down so the suite completes on a single CPU core in minutes; --full
 uses paper-scale parameters.
+
+``--json OUT.json`` additionally writes every row as a structured record
+(name, us_per_call, derived, n_eval, backend where known) plus run metadata
+(git sha, jax version/backend, mode) — and extracts the fill rows into
+``BENCH_fill.json`` next to it: the perf-trajectory artifact DESIGN.md §7
+tracks across PRs.
+
+``--gate-fill`` turns the P-V2 vs P-V3 comparison into a regression gate:
+exit nonzero if any ``fill_fused`` row is slower than its ``fill_pallas``
+twin (CI's bench-smoke job runs ``--only table1,batch --json --gate-fill``).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+
+def fill_rows(rows: list[dict]) -> list[dict]:
+    """The fill perf-trajectory subset: every row timing a fill variant."""
+    return [r for r in rows if "/fill" in r["name"]]
+
+
+def gate_fill(rows: list[dict]) -> list[str]:
+    """Pair each fused fill row with its baseline-pallas twin; return a
+    failure message per pair where fused is slower."""
+    base = {r["name"].replace("/fill_pallas", ""): r for r in rows
+            if r["name"].endswith("/fill_pallas")}
+    failures = []
+    for r in rows:
+        if not r["name"].endswith("/fill_fused"):
+            continue
+        twin = base.get(r["name"].replace("/fill_fused", ""))
+        if twin is None:
+            continue
+        if r["us_per_call"] > twin["us_per_call"]:
+            failures.append(
+                f"GATE: {r['name']} ({r['us_per_call']:.0f}us) slower than "
+                f"{twin['name']} ({twin['us_per_call']:.0f}us)")
+    return failures
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default=None, metavar="OUT.json",
+                    help="write structured results + BENCH_fill.json")
+    ap.add_argument("--gate-fill", action="store_true",
+                    help="exit nonzero if the fused fill is slower than the "
+                         "baseline pallas fill on any measured shape")
     args = ap.parse_args()
     fast = not args.full
     only = set(filter(None, args.only.split(",")))
@@ -25,6 +67,7 @@ def main() -> None:
     from . import (bench_applications, bench_batch, bench_breakdown,
                    bench_integrands, bench_lm_step, bench_multidevice,
                    bench_scaling, bench_stratification)
+    from . import common
 
     suites = {
         "table1": bench_breakdown,
@@ -36,6 +79,7 @@ def main() -> None:
         "batch": bench_batch,
         "lm": bench_lm_step,
     }
+    common.reset_rows()
     print("name,us_per_call,derived")
     for key, mod in suites.items():
         if only and key not in only:
@@ -47,6 +91,44 @@ def main() -> None:
             print(f"{key}/ERROR,0,{type(e).__name__}: {e}", file=sys.stdout)
         print(f"{key}/_suite_wall,{(time.time()-t0)*1e6:.0f},",
               file=sys.stdout)
+
+    if args.json:
+        import jax
+        meta = {
+            "git_sha": common.git_sha(),
+            "jax_version": jax.__version__,
+            "jax_backend": jax.default_backend(),
+            "mode": "full" if args.full else "fast",
+            "rows": common.ROWS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(meta, f, indent=1)
+        frows = fill_rows(common.ROWS)
+        if frows:
+            fill_path = os.path.join(os.path.dirname(os.path.abspath(args.json)),
+                                     "BENCH_fill.json")
+            with open(fill_path, "w") as f:
+                json.dump({**{k: v for k, v in meta.items() if k != "rows"},
+                           "rows": frows}, f, indent=1)
+            print(f"# wrote {args.json} and {fill_path}", file=sys.stderr)
+
+    if args.gate_fill:
+        failures = gate_fill(common.ROWS)
+        for msg in failures:
+            print(msg, file=sys.stderr)
+        if failures:
+            sys.exit(2)
+        n = sum(1 for r in common.ROWS
+                if r["name"].endswith("/fill_fused")
+                and r["name"].replace("/fill_fused", "/fill_pallas")
+                in {x["name"] for x in common.ROWS})
+        if n == 0:
+            # A gate that measured nothing is a broken gate, not a green one
+            # (e.g. --only dropped table1, or the fill rows were renamed).
+            print("GATE: no fused/baseline fill pair was measured — "
+                  "--gate-fill has nothing to check", file=sys.stderr)
+            sys.exit(2)
+        print(f"# fill gate OK ({n} fused shapes measured)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -112,13 +112,23 @@ def fill_reference(edges, n_h, key, integrand, *, nstrat: int, n_cap: int,
 
 
 def fill_pallas(edges, n_h, key, integrand, *, nstrat: int, n_cap: int,
-                chunk: int, dtype=jnp.float32, interpret: bool = True,
-                fused_cubes: bool = False, tile: int = 256) -> FillResult:
-    """Pallas-kernel fill: transform/eval/map-hist inside the kernel."""
+                chunk: int, dtype=jnp.float32, interpret: bool | None = None,
+                fused_cubes: bool = True, tile: int | None = None,
+                start_chunk=0, n_chunks: int | None = None,
+                kahan: bool = False,
+                rng_in_kernel: bool | None = None) -> FillResult:
+    """Pallas-kernel fill, scan-chunked like :func:`fill_reference` (same
+    ``start_chunk``/``n_chunks`` distribution unit, same chunk-keyed RNG with
+    bit-identical streams).  ``fused_cubes=True`` (default) runs the P-V3
+    streaming kernel: in-kernel RNG + in-kernel cube accumulation, no per-eval
+    array anywhere.  ``interpret=None`` autodetects (compiled on TPU,
+    interpreter elsewhere); ``tile=None`` autotunes against the VMEM budget."""
     from repro.kernels import ops as kops
     return kops.fill(edges, n_h, key, integrand, nstrat=nstrat, n_cap=n_cap,
                      chunk=chunk, dtype=dtype, interpret=interpret,
-                     fused_cubes=fused_cubes, tile=tile)
+                     fused_cubes=fused_cubes, tile=tile,
+                     start_chunk=start_chunk, n_chunks=n_chunks, kahan=kahan,
+                     rng_in_kernel=rng_in_kernel)
 
 
 BACKENDS = {"ref": fill_reference, "pallas": fill_pallas}

@@ -36,8 +36,9 @@ class VegasConfig:
     chunk: int = 16_384           # evals per scanned chunk (batch_size analog)
     dtype: str = "float32"
     backend: str = "ref"          # 'ref' | 'pallas'
-    interpret: bool = True        # pallas interpret mode (CPU validation)
-    fused_cubes: bool = False     # in-kernel cube accumulation (perf iteration)
+    interpret: bool | None = None  # None => autodetect (kernels.backend_default)
+    fused_cubes: bool = True      # in-kernel RNG + cube accumulation (P-V3)
+    tile: int | None = None       # pallas tile; None => VMEM-budget autotune
 
     def resolve(self, dim: int) -> "ResolvedConfig":
         ns = self.nstrat or strat.choose_nstrat(self.neval, dim, self.max_cubes)
@@ -114,7 +115,8 @@ def iteration_step(state: VegasState, integrand: Integrand,
         fill_fn = functools.partial(
             fill_mod.BACKENDS[cfg.backend], nstrat=cfg.nstrat, n_cap=cfg.n_cap,
             chunk=cfg.chunk, dtype=dtype,
-            **({"interpret": cfg.interpret, "fused_cubes": cfg.fused_cubes}
+            **({"interpret": cfg.interpret, "fused_cubes": cfg.fused_cubes,
+                "tile": cfg.tile}
                if cfg.backend == "pallas" else {}))
     res = fill_fn(state.edges, state.n_h, key_it, integrand)
 

@@ -27,6 +27,8 @@ straggler re-dispatch (:func:`recompute_shard`, DESIGN.md D3/§5) safe.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
@@ -60,54 +62,73 @@ def shard_chunk_range(total_chunks: int, shard: int, n_shards: int):
     return shard * count, count
 
 
-def make_sharded_fill(mesh, axis_names, resolved_cfg):
+def _shard_fill_callable(resolved_cfg, backend: str | None):
+    """The per-shard fill with everything bound except the chunk range.
+
+    ``backend=None`` follows the config's own backend.  Both backends share
+    the chunk-keyed RNG contract (bit-identical streams) and accept
+    ``start_chunk``/``n_chunks`` + ``kahan``, so sharding is backend-blind;
+    the pallas path additionally gets its kernel knobs from the config
+    (interpret autodetect, P-V3 fusion, tile autotune).
+    """
+    rc = resolved_cfg
+    backend = rc.backend if backend is None else backend
+    kw = dict(nstrat=rc.nstrat, n_cap=rc.n_cap, chunk=rc.chunk,
+              dtype=jnp.dtype(rc.dtype), kahan=True)
+    if backend == "pallas":
+        kw.update(interpret=rc.interpret, fused_cubes=rc.fused_cubes,
+                  tile=rc.tile)
+    return functools.partial(fill_mod.BACKENDS[backend], **kw)
+
+
+def make_sharded_fill(mesh, axis_names, resolved_cfg, backend: str | None = None):
     """Build a drop-in ``fill_fn`` for ``core.integrator.iteration_step``.
 
-    ``fill_fn(edges, n_h, key, integrand)`` shard_maps the reference fill over
-    the mesh axes named in ``axis_names`` (1D or 2D meshes: shards are
-    enumerated in row-major order over the named axes) and psum-reduces the
-    per-shard :class:`FillResult` partials, returning the same replicated
-    result on every device.  Works eagerly and under jit (``run`` jits the
-    whole iteration around it, so adaptation stays on-device, C4/C6).
+    ``fill_fn(edges, n_h, key, integrand)`` shard_maps the configured fill
+    backend (``'ref'`` or ``'pallas'``; default: the config's own) over the
+    mesh axes named in ``axis_names`` (1D or 2D meshes: shards are enumerated
+    in row-major order over the named axes) and psum-reduces the per-shard
+    :class:`FillResult` partials, returning the same replicated result on
+    every device.  Works eagerly and under jit (``run`` jits the whole
+    iteration around it, so adaptation stays on-device, C4/C6).
     """
     rc = resolved_cfg
     axis_names = tuple(axis_names)
     n_shards = mesh_shard_count(mesh, axis_names)
     total_chunks = rc.n_cap // rc.chunk
     _, per_shard = shard_chunk_range(total_chunks, 0, n_shards)
-    dtype = jnp.dtype(rc.dtype)
+    shard_fill = _shard_fill_callable(rc, backend)
 
     def fill_fn(edges, n_h, key, integrand):
         def body(edges, n_h, key):
             idx = jnp.zeros((), jnp.int32)
             for a in axis_names:  # row-major linear shard index
                 idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
-            part = fill_mod.fill_reference(
-                edges, n_h, key, integrand, nstrat=rc.nstrat, n_cap=rc.n_cap,
-                chunk=rc.chunk, dtype=dtype, start_chunk=idx * per_shard,
-                n_chunks=per_shard, kahan=True)
+            part = shard_fill(edges, n_h, key, integrand,
+                              start_chunk=idx * per_shard, n_chunks=per_shard)
             return jax.tree.map(lambda x: jax.lax.psum(x, axis_names), part)
 
+        # check_rep=False: pallas_call has no replication rule under
+        # shard_map; the psum above already replicates the result explicitly.
         sharded = _shard_map(body, mesh=mesh, in_specs=(P(), P(), P()),
-                             out_specs=P())
+                             out_specs=P(), check_rep=False)
         return sharded(edges, n_h, key)
 
     return fill_fn
 
 
 def recompute_shard(edges, n_h, key, integrand, resolved_cfg, shard: int,
-                    n_shards: int) -> fill_mod.FillResult:
+                    n_shards: int, backend: str | None = None) -> fill_mod.FillResult:
     """Recompute one shard's partial locally — no mesh required.
 
     The straggler / failure re-dispatch hook (DESIGN.md D3/§5): because the
     RNG is keyed by global chunk id, any host can recompute shard ``shard``
     of an ``n_shards``-way fill and get bit-identical samples to what the
-    straggling device would have produced.  Summing all shards' partials
-    equals the unsharded fill (checked by tests/_dist_worker.py check 5).
+    straggling device would have produced — with either backend, since the
+    streams are shared bit-for-bit.  Summing all shards' partials equals the
+    unsharded fill (checked by tests/_dist_worker.py check 5).
     """
     rc = resolved_cfg
     start, count = shard_chunk_range(rc.n_cap // rc.chunk, shard, n_shards)
-    return fill_mod.fill_reference(
-        edges, n_h, key, integrand, nstrat=rc.nstrat, n_cap=rc.n_cap,
-        chunk=rc.chunk, dtype=jnp.dtype(rc.dtype), start_chunk=start,
-        n_chunks=count, kahan=True)
+    return _shard_fill_callable(rc, backend)(
+        edges, n_h, key, integrand, start_chunk=start, n_chunks=count)

@@ -1,3 +1,55 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel layer: the fill hot-spot the paper optimizes with a custom
+CUDA kernel (vegas_fill.py + ops.py + ref.py) plus the interpret/compiled
+mode policy shared by every caller.
+
+``interpret=None`` (the default everywhere) autodetects: compiled Mosaic on a
+real TPU, the Pallas interpreter elsewhere.  Explicit True/False is honored
+but logged loudly — the historical failure mode was ``interpret=True``
+silently running the (orders-of-magnitude slower) interpreter on real
+accelerators.
+"""
+
+from __future__ import annotations
+
+import functools
+import logging
+
+import jax
+
+log = logging.getLogger("repro.kernels")
+
+
+def backend_default() -> str:
+    """Autodetected Pallas execution mode for this process: ``'compiled'``
+    on a real TPU, ``'interpret'`` everywhere else (CPU CI, GPU — the kernel
+    is written against the TPU/Mosaic lowering)."""
+    return "compiled" if jax.default_backend() == "tpu" else "interpret"
+
+
+@functools.lru_cache(maxsize=None)
+def _announce(platform: str, mode: str, source: str) -> None:
+    msg = (f"Pallas fill mode: {mode.upper()} on platform={platform} "
+           f"({source})")
+    if mode == "interpret" and platform == "tpu":
+        log.warning("%s — the interpreter is orders of magnitude slower than "
+                    "compiled Mosaic; pass interpret=None to autodetect", msg)
+    elif mode == "compiled" and platform != "tpu":
+        log.warning("%s — compiled Pallas is only supported on TPU; this "
+                    "will likely fail to lower", msg)
+    else:
+        log.info("%s", msg)
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve the tri-state ``interpret`` flag to a concrete bool, logging
+    the choice once per (platform, flag) combination."""
+    platform = jax.default_backend()
+    if interpret is None:
+        chosen = backend_default() == "interpret"
+        _announce(platform, "interpret" if chosen else "compiled",
+                  "autodetected, interpret=None")
+    else:
+        chosen = bool(interpret)
+        _announce(platform, "interpret" if chosen else "compiled",
+                  f"explicit interpret={chosen}")
+    return chosen

@@ -1,5 +1,20 @@
-"""Jitted wrapper exposing the Pallas fill kernel behind the core FillResult
-contract (core/fill.py BACKENDS['pallas'])."""
+"""Jitted wrapper exposing the Pallas fill kernels behind the core FillResult
+contract (core/fill.py BACKENDS['pallas']).
+
+The fill is scan-chunked exactly like ``core.fill.fill_reference``: chunk
+``g`` draws its uniforms from ``fold_in(key, g)`` and its cube ids from the
+global eval offset ``g * chunk``, so live memory is bounded by one chunk
+(never by ``n_cap``) and ``start_chunk``/``n_chunks`` select a contiguous
+chunk range — the unit ``dist.sharded_fill`` distributes (DESIGN.md C5).
+
+Two kernel paths (DESIGN.md §7):
+  * ``fused_cubes=False`` (P-V2 baseline): uniforms materialized per chunk in
+    HBM, per-eval weights streamed back out, cube reduction via XLA
+    segment-sum over the sorted ids.
+  * ``fused_cubes=True``  (P-V3): the streaming kernel — in-kernel threefry
+    RNG (bit-identical streams) + VMEM-resident cube accumulation; no
+    per-eval array ever exists, in HBM or as a kernel output.
+"""
 
 from __future__ import annotations
 
@@ -7,63 +22,157 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import strat
+from . import resolve_interpret
 from . import vegas_fill as vk
 
 
+def hoist_closure(integrand, x_shape, dtype):
+    """Split ``integrand`` into a closure-free function + the arrays it
+    closes over (ridge's peak table, a batched family's vmapped params, ...).
+
+    A traced pallas kernel body may not capture constants or outer-trace
+    tracers, so ops.fill hoists them here and ships them through the kernel
+    as explicit inputs.  (``jax.closure_convert`` is not enough: it hoists
+    only tracers involved in differentiation, leaving plain array constants
+    in the closure.)  Returns ``(pure_fn(x, *consts), consts)``.
+    """
+    closed = jax.make_jaxpr(lambda xx: integrand(xx))(
+        jax.ShapeDtypeStruct(x_shape, dtype))
+    consts = tuple(closed.consts)
+
+    def pure(x, *cs):
+        out = jax.core.eval_jaxpr(closed.jaxpr, list(cs), x)
+        return out[0]
+
+    return pure, consts
+
+
+def key_bits(key) -> jax.Array:
+    """Raw (2,) uint32 key data for either a legacy raw key or a typed key."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        return jax.random.key_data(key)
+    return key
+
+
+def autotune_tile(chunk: int, d: int, ninc: int, n_cubes: int, *,
+                  vmem_budget: int = 8 << 20, max_tile: int = 1024) -> int:
+    """Largest tile that divides ``chunk`` and fits the VMEM budget.
+
+    Footprint model (f32, see DESIGN.md §7 budget math): the d pass-1 one-hots
+    stay live for pass-2 reuse (d * tile * ninc), the cube-window one-hot adds
+    tile * span, the transform scratch ~8 copies of (tile, d), plus the
+    grid-resident state — map tables/accumulators (3 * d * ninc) and the two
+    (rows, LANE) cube-moment accumulators (~2.1 MB at the max_cubes = 2^18
+    cap), which shrink the budget available to per-tile scratch.
+    """
+    best = 1
+    for t in range(1, min(chunk, max_tile) + 1):
+        if chunk % t:
+            continue
+        span = vk.span_for_tile(t)
+        resident = 4 * (3 * d * ninc + 2 * vk.padded_cube_rows(n_cubes, t)
+                        * vk.LANE)
+        fp = 4 * (d * t * ninc + t * span + 8 * t * d) + resident
+        if fp <= vmem_budget:
+            best = t
+    return best
+
+
+def _pick_tile(tile: int | None, chunk: int, d: int, ninc: int,
+               n_cubes: int) -> int:
+    if tile is None:
+        tile = autotune_tile(chunk, d, ninc, n_cubes)
+    else:
+        tile = min(tile, chunk)
+        if chunk % tile != 0:
+            # The scanned grid is per-chunk, so the tile must divide chunk:
+            # fall back to the largest divisor below the request.
+            tile = next(t for t in range(tile, 0, -1) if chunk % t == 0)
+    if tile < min(8, chunk):
+        # e.g. a prime chunk: the only divisor is 1, which would explode the
+        # sequential grid (catastrophic under interpret mode).
+        raise ValueError(
+            f"chunk={chunk} has no usable tile divisor <= {tile}; "
+            f"pick a chunk with a divisor >= 8 (or a tile dividing it)")
+    return tile
+
+
 def fill(edges, n_h, key, integrand, *, nstrat: int, n_cap: int, chunk: int,
-         dtype=jnp.float32, interpret: bool = True, fused_cubes: bool = False,
-         tile: int = 256, start_chunk=0, n_chunks: int | None = None):
+         dtype=jnp.float32, interpret: bool | None = None,
+         fused_cubes: bool = True, tile: int | None = None, start_chunk=0,
+         n_chunks: int | None = None, kahan: bool = False,
+         rng_in_kernel: bool | None = None):
     """Kernel-backed fill pass returning core.fill.FillResult.
 
-    Baseline decomposition (paper-faithful): the kernel produces per-eval
-    weights + the importance-map histogram; the per-cube reduction runs as an
-    XLA segment-sum over the (sorted) cube ids. ``fused_cubes`` switches to
-    in-kernel cube accumulation (perf iteration P-V3).
-
     RNG follows the same global-chunk contract as core.fill.fill_reference:
-    uniforms for global chunk g are uniform(fold_in(key, g)) — elastic across
-    any device count.
+    uniforms for global chunk g are uniform(fold_in(key, g)) — bit-identical
+    streams across backends and elastic across any device count.  ``kahan``
+    carries a compensation term through the chunk scan (device-count
+    invariance, DESIGN.md §5).
+
+    ``rng_in_kernel=None`` resolves to ``not interpret``: the streaming
+    kernel generates its own uniforms when compiled for TPU (zero per-eval
+    float traffic), while the interpreter gets them precomputed per chunk —
+    bit-identical either way, see ``vegas_fill.vegas_fill_fused``.
     """
     from repro.core.fill import FillResult
 
-    del fused_cubes  # P-V3; baseline path below
+    interpret = resolve_interpret(interpret)
+    if rng_in_kernel is None:
+        rng_in_kernel = not interpret
+    dtype = jnp.dtype(dtype)
     d = edges.shape[0]
     ninc = edges.shape[1] - 1
     n_cubes = n_h.shape[0]
     if n_chunks is None:
         assert n_cap % chunk == 0, (n_cap, chunk)
         n_chunks = n_cap // chunk
-    n_local = n_chunks * chunk
-    tile = min(tile, n_local)
-    if n_local % tile != 0:
-        # Non-power-of-two chunk shapes: the Pallas grid needs tile | n_local.
-        # chunk always divides n_local (= n_chunks * chunk), so fall back to
-        # the largest divisor of chunk that fits the requested tile.
-        cap = min(tile, chunk)
-        tile = next(t for t in range(cap, 0, -1) if chunk % t == 0)
-        if tile < min(8, chunk):
-            # e.g. a prime chunk: the only divisor is 1, which would explode
-            # the sequential grid (catastrophic under interpret mode).
-            raise ValueError(
-                f"chunk={chunk} has no usable tile divisor <= {cap}; "
-                f"pick a chunk with a divisor >= 8 (or a tile dividing it)")
-
-    gchunks = start_chunk + jnp.arange(n_chunks)
-    keys = jax.vmap(lambda g: jax.random.fold_in(key, g))(gchunks)
-    u = jax.vmap(lambda k: jax.random.uniform(k, (chunk, d), dtype=dtype))(keys)
-    u = u.reshape(n_local, d)
-    cube = strat.cubes_for_slice(n_h, start_chunk * chunk, n_local)
+    tile = _pick_tile(tile, chunk, d, ninc, n_cubes)
+    if fused_cubes and dtype != jnp.float32:
+        raise ValueError(
+            f"fused_cubes=True is f32-only (the in-kernel RNG reproduces the "
+            f"f32 uniform bit pattern); got dtype={dtype}")
 
     edges_lo = edges[:, :-1].astype(dtype)
     widths = jnp.diff(edges, axis=1).astype(dtype)
+    pure_ig, ig_consts = hoist_closure(integrand, (tile, d), dtype)
 
-    w, ms, mc = vk.vegas_fill(u, cube.reshape(n_local, 1), edges_lo, widths,
-                              nstrat=nstrat, n_cubes=n_cubes,
-                              integrand=integrand, tile=tile,
-                              interpret=interpret)
-    w = w.reshape(n_local)
-    # Per-cube reduction outside the kernel (cube ids are sorted; XLA lowers
-    # this to an efficient sorted-scatter on TPU).
-    s1 = jnp.zeros((n_cubes + 1,), dtype).at[cube].add(w)[:n_cubes]
-    s2 = jnp.zeros((n_cubes + 1,), dtype).at[cube].add(w * w)[:n_cubes]
-    return FillResult(ms, mc, s1, s2)
+    def chunk_contrib(gchunk):
+        k = jax.random.fold_in(key, gchunk)
+        cube = strat.cubes_for_slice(n_h, gchunk * chunk, chunk)
+        if fused_cubes:
+            u = (None if rng_in_kernel else
+                 jax.random.uniform(k, (chunk, d), dtype=dtype))
+            ms, mc, s1p, s2p = vk.vegas_fill_fused(
+                key_bits(k).reshape(1, 2), cube.reshape(chunk, 1), edges_lo,
+                widths, nstrat=nstrat, n_cubes=n_cubes, integrand=pure_ig,
+                tile=tile, interpret=interpret, u=u, ig_consts=ig_consts)
+            return FillResult(ms, mc, s1p.reshape(-1)[:n_cubes],
+                              s2p.reshape(-1)[:n_cubes])
+        u = jax.random.uniform(k, (chunk, d), dtype=dtype)
+        w, ms, mc = vk.vegas_fill(u, cube.reshape(chunk, 1), edges_lo, widths,
+                                  nstrat=nstrat, n_cubes=n_cubes,
+                                  integrand=pure_ig, tile=tile,
+                                  interpret=interpret, ig_consts=ig_consts)
+        w = w.reshape(chunk)
+        # Per-cube reduction outside the kernel (ids are sorted; XLA lowers
+        # this to a sorted-scatter; the overflow bucket is dropped).
+        s1 = jnp.zeros((n_cubes + 1,), dtype).at[cube].add(w)[:n_cubes]
+        s2 = jnp.zeros((n_cubes + 1,), dtype).at[cube].add(w * w)[:n_cubes]
+        return FillResult(ms, mc, s1, s2)
+
+    def body(carry, step):
+        contrib = chunk_contrib(start_chunk + step)
+        if not kahan:
+            return carry + contrib, None
+        acc, comp = carry
+        y = jax.tree.map(jnp.subtract, contrib, comp)
+        t = jax.tree.map(jnp.add, acc, y)
+        comp = jax.tree.map(lambda tt, a, yy: (tt - a) - yy, t, acc, y)
+        return (t, comp), None
+
+    zero = FillResult(jnp.zeros((d, ninc), dtype), jnp.zeros((d, ninc), dtype),
+                      jnp.zeros((n_cubes,), dtype), jnp.zeros((n_cubes,), dtype))
+    init = (zero, zero) if kahan else zero
+    out, _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    return out[0] if kahan else out

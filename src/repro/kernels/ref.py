@@ -59,3 +59,24 @@ def vegas_fill_ref(u, cube, edges_lo, widths, *, nstrat: int, n_cubes: int,
     mc = jnp.zeros((d * ninc,), dtype).at[flat].add(
         jnp.broadcast_to(cnt[:, None], (n, d)).reshape(-1)).reshape(d, ninc)
     return w.reshape(n, 1), ms, mc
+
+
+def vegas_fill_fused_ref(u, cube, edges_lo, widths, *, nstrat: int,
+                         n_cubes: int, integrand):
+    """Oracle for the P-V3 fused kernel: same transform/eval/map histogram as
+    :func:`vegas_fill_ref` plus the per-cube moment reduction done in-kernel
+    by ``vegas_fill_fused`` (scatter-add over the sorted ids here).
+
+    Takes explicit uniforms (the fused kernel generates them in-kernel; feed
+    it ``vegas_fill.chunk_uniforms`` output for bit-identical streams).
+    Returns ``(ms, mc, s1 (n_cubes,), s2 (n_cubes,))`` — no per-eval output.
+    """
+    n = u.shape[0]
+    dtype = u.dtype
+    w, ms, mc = vegas_fill_ref(u, cube, edges_lo, widths, nstrat=nstrat,
+                               n_cubes=n_cubes, integrand=integrand)
+    w = w.reshape(n)
+    cid = cube.reshape(n)
+    s1 = jnp.zeros((n_cubes + 1,), dtype).at[cid].add(w)[:n_cubes]
+    s2 = jnp.zeros((n_cubes + 1,), dtype).at[cid].add(w * w)[:n_cubes]
+    return ms, mc, s1, s2

@@ -1,8 +1,20 @@
-"""Pallas TPU kernel for the VEGAS+ fill phase (cuVegas' ``vegasFill``).
+"""Pallas TPU kernels for the VEGAS+ fill phase (cuVegas' ``vegasFill``).
 
-One kernel fuses, per VMEM tile of evaluations:
+Two kernels, one contract (DESIGN.md §7, perf iterations P-V1 -> P-V3):
+
+``vegas_fill`` (baseline, P-V2): fuses, per VMEM tile of evaluations,
   stratified-sample decode -> map transform + Jacobian -> integrand eval
-  -> importance-map weight accumulation.
+  -> importance-map weight accumulation,
+with uniforms streamed IN from HBM and per-eval weights streamed OUT (the
+per-cube reduction runs as an XLA segment-sum outside the kernel).
+
+``vegas_fill_fused`` (P-V3): the fully streaming kernel.  Uniforms are
+generated INSIDE the kernel (bit-exact threefry, matching
+``jax.random.uniform(fold_in(key, g), (chunk, d))`` — see ``chunk_uniforms``)
+and the per-cube first/second moments are accumulated into a VMEM-resident
+accumulator across the sequential grid, so the only per-eval HBM traffic left
+is the (chunk, 1) int32 sorted cube-id input: kernel output size is
+O(d*ninc + n_cubes) regardless of how many evaluations stream through.
 
 TPU adaptation of the CUDA design (DESIGN.md D1-D4):
   * cuVegas' per-thread ``atomicAdd`` into the (d, ninc) map histogram becomes
@@ -37,8 +49,9 @@ from jax.experimental import pallas as pl
 _TINY = 1e-30
 
 
-def _fill_kernel(u_ref, cube_ref, edges_ref, widths_ref, w_ref, ms_ref, mc_ref,
-                 *, nstrat: int, n_cubes: int, ninc: int, integrand):
+def _fill_kernel(u_ref, cube_ref, edges_ref, widths_ref, *rest,
+                 nstrat: int, n_cubes: int, ninc: int, integrand):
+    *const_refs, w_ref, ms_ref, mc_ref = rest
     i = pl.program_id(0)
     u = u_ref[...]                      # (tile, d)
     cube = cube_ref[...]                # (tile, 1) int32
@@ -74,8 +87,10 @@ def _fill_kernel(u_ref, cube_ref, edges_ref, widths_ref, w_ref, ms_ref, mc_ref,
     x = jnp.concatenate(x_cols, axis=1)                         # (tile, d)
     jac = jnp.exp(logjac)                                       # (tile, 1)
 
-    # ---- integrand evaluation (traced into the kernel) ----
-    fx = integrand(x).reshape(tile, 1).astype(dtype)
+    # ---- integrand evaluation (traced into the kernel; closure consts
+    # arrive as trailing refs, see ``_const_transport``) ----
+    fx = integrand(x, *[r[...] for r in const_refs])
+    fx = fx.reshape(tile, 1).astype(dtype)
     w = jnp.where(valid, jac * fx, jnp.zeros((), dtype))        # (tile, 1)
     w_ref[...] = w
     w2 = w * w
@@ -99,16 +114,43 @@ def _fill_kernel(u_ref, cube_ref, edges_ref, widths_ref, w_ref, ms_ref, mc_ref,
         mc_ref[k:k + 1, :] += mc_k
 
 
+def _const_transport(integrand, ig_consts):
+    """Closure constants ride into the kernel as (1, size) VMEM inputs.
+
+    Returns ``(kernel_integrand, flat_consts, const_specs)``: the flattened
+    arrays, their full-block BlockSpecs, and a wrapper restoring the original
+    shapes before calling ``integrand(x, *consts)``.  Empty for closure-free
+    integrands — the common fast path.
+    """
+    ig_consts = tuple(ig_consts)
+    shapes = [jnp.shape(c) for c in ig_consts]
+    flat = [jnp.reshape(c, (1, max(int(jnp.size(c)), 1))) for c in ig_consts]
+    specs = [pl.BlockSpec(f.shape, lambda i: (0, 0)) for f in flat]
+
+    def kernel_integrand(x, *flat_refs):
+        return integrand(x, *[f.reshape(s)
+                              for f, s in zip(flat_refs, shapes)])
+
+    return kernel_integrand, flat, specs
+
+
 def vegas_fill(u, cube, edges_lo, widths, *, nstrat: int, n_cubes: int,
-               integrand, tile: int = 256, interpret: bool = True):
-    """pallas_call wrapper. Shapes as in kernels/ref.py; ``n % tile == 0``."""
+               integrand, tile: int = 256, interpret: bool = True,
+               ig_consts=()):
+    """pallas_call wrapper. Shapes as in kernels/ref.py; ``n % tile == 0``.
+
+    ``ig_consts``: arrays closed over by ``integrand`` (from
+    ``jax.closure_convert``), passed through as kernel inputs — the integrand
+    is then called as ``integrand(x, *ig_consts)``.
+    """
     n, d = u.shape
     ninc = edges_lo.shape[1]
     assert n % tile == 0, (n, tile)
     dtype = u.dtype
+    kig, flat_consts, const_specs = _const_transport(integrand, ig_consts)
 
     kernel = functools.partial(_fill_kernel, nstrat=nstrat, n_cubes=n_cubes,
-                               ninc=ninc, integrand=integrand)
+                               ninc=ninc, integrand=kig)
     grid = (n // tile,)
     return pl.pallas_call(
         kernel,
@@ -118,6 +160,7 @@ def vegas_fill(u, cube, edges_lo, widths, *, nstrat: int, n_cubes: int,
             pl.BlockSpec((tile, 1), lambda i: (i, 0)),      # cube
             pl.BlockSpec((d, ninc), lambda i: (0, 0)),      # edges_lo
             pl.BlockSpec((d, ninc), lambda i: (0, 0)),      # widths
+            *const_specs,                                   # integrand consts
         ],
         out_specs=[
             pl.BlockSpec((tile, 1), lambda i: (i, 0)),      # w
@@ -130,4 +173,286 @@ def vegas_fill(u, cube, edges_lo, widths, *, nstrat: int, n_cubes: int,
             jax.ShapeDtypeStruct((d, ninc), dtype),
         ],
         interpret=interpret,
-    )(u, cube, edges_lo, widths)
+    )(u, cube, edges_lo, widths, *flat_consts)
+
+
+# ---------------------------------------------------------------------------
+# In-kernel RNG (P-V3 part 1): threefry-2x32 counter mode, bit-exact with
+# jax.random.uniform under the default (non-partitionable) threefry impl.
+# ---------------------------------------------------------------------------
+
+LANE = 128          # TPU lane width: cube-accumulator rows/offsets align to it
+_ROT_A = (13, 15, 26, 6)
+_ROT_B = (17, 29, 16, 24)
+
+
+def _rotl32(x, r: int):
+    return (x << jnp.uint32(r)) | (x >> jnp.uint32(32 - r))
+
+
+def _threefry2x32(k0, k1, x0, x1):
+    """The Threefry-2x32 block cipher on uint32 arrays, written in plain jnp
+    ops (shifts/xor/add) so it traces into a Pallas kernel body — same key
+    schedule and rotation constants as jax._src.prng.threefry2x32_p, so the
+    outputs are bit-identical to what ``jax.random`` produces."""
+    k2 = k0 ^ k1 ^ jnp.uint32(0x1BD11BDA)
+    x0 = x0 + k0
+    x1 = x1 + k1
+    sched = ((k1, k2), (k2, k0), (k0, k1), (k1, k2), (k2, k0))
+    rots = (_ROT_A, _ROT_B, _ROT_A, _ROT_B, _ROT_A)
+    for i in range(5):
+        for r in rots[i]:
+            x0 = x0 + x1
+            x1 = _rotl32(x1, r)
+            x1 = x0 ^ x1
+        a, b = sched[i]
+        x0 = x0 + a
+        x1 = x1 + b + jnp.uint32(i + 1)
+    return x0, x1
+
+
+def _partitionable() -> bool:
+    """The jax_threefry_partitionable flag, read at TRACE time: it selects
+    which of jax's two threefry counter layouts the in-kernel RNG must
+    reproduce (flipping the flag between trace and execution is not
+    supported — neither is it for jax.random itself under jit)."""
+    return bool(jax.config.jax_threefry_partitionable)
+
+
+def _uniform_from_counts(k0, k1, c, n_total: int):
+    """f32 uniforms in [0, 1) for flat counter positions ``c`` (uint32) of a
+    ``jax.random.uniform(key, shape)`` draw with ``prod(shape) == n_total``.
+
+    Matches jax's threefry counter layout bit-for-bit under BOTH settings of
+    ``jax_threefry_partitionable``:
+      * partitionable: element ``c`` is ``xor(threefry(key, hi32(c),
+        lo32(c)))`` — purely per-element (requires ``n_total < 2**32``, which
+        a chunk always satisfies);
+      * original: ``iota(n_total)`` is split into two halves (the odd case
+        pads one zero) fed as the two cipher inputs, so element ``c`` lives
+        in block ``c mod half`` and takes cipher output 0 or 1 by half.
+    The float conversion mirrors ``jax._src.random._uniform``: randomize the
+    mantissa at exponent 0 and subtract 1.
+    """
+    if _partitionable():
+        o0, o1 = _threefry2x32(k0, k1, jnp.zeros_like(c), c)
+        bits = o0 ^ o1
+    else:
+        half = (n_total + 1) // 2
+        in_lo = c < jnp.uint32(half)
+        b = jnp.where(in_lo, c, c - jnp.uint32(half))
+        hi = b + jnp.uint32(half)
+        if n_total % 2:
+            hi = jnp.where(hi == jnp.uint32(n_total), jnp.uint32(0), hi)
+        o0, o1 = _threefry2x32(k0, k1, b, hi)
+        bits = jnp.where(in_lo, o0, o1)
+    fb = (bits >> jnp.uint32(9)) | jnp.uint32(0x3F800000)
+    u = jax.lax.bitcast_convert_type(fb, jnp.float32) - jnp.float32(1.0)
+    return jnp.maximum(u, jnp.float32(0.0))
+
+
+def _tile_uniforms(k0, k1, row0, tile: int, chunk: int, d: int):
+    """(tile, d) uniforms == rows [row0, row0+tile) of
+    ``jax.random.uniform(key, (chunk, d))`` for the key behind (k0, k1)."""
+    rows = jax.lax.broadcasted_iota(jnp.uint32, (tile, d), 0)
+    cols = jax.lax.broadcasted_iota(jnp.uint32, (tile, d), 1)
+    c = (jnp.uint32(row0) + rows) * jnp.uint32(d) + cols
+    return _uniform_from_counts(k0, k1, c, chunk * d)
+
+
+def chunk_uniforms(key_bits, *, chunk: int, d: int, tile: int | None = None):
+    """Reassemble a whole chunk's uniforms from per-tile in-kernel draws.
+
+    ``key_bits``: (2,) uint32 raw key data of ``fold_in(key, g)``.  Equals
+    ``jax.random.uniform(fold_in(key, g), (chunk, d))`` BIT-FOR-BIT (the RNG
+    contract test); ``tile`` exercises the same slicing the kernel grid uses.
+    """
+    tile = chunk if tile is None else tile
+    assert chunk % tile == 0, (chunk, tile)
+    k0, k1 = key_bits[0], key_bits[1]
+    parts = [_tile_uniforms(k0, k1, i * tile, tile, chunk, d)
+             for i in range(chunk // tile)]
+    return jnp.concatenate(parts, axis=0)
+
+
+def span_for_tile(tile: int) -> int:
+    """Width of the per-tile cube-id window: sorted ids advance by at most one
+    per eval, so a tile touches <= tile distinct ids; aligning the window base
+    down to a LANE boundary costs at most LANE - 1 extra slots."""
+    return ((tile + LANE - 1) // LANE) * LANE + LANE
+
+
+def padded_cube_rows(n_cubes: int, tile: int) -> int:
+    """Rows of the (rows, LANE) VMEM cube accumulator: the highest window base
+    is align_down(n_cubes - 1), and the window extends span slots past it."""
+    return (max(n_cubes - 1, 0) // LANE) + span_for_tile(tile) // LANE
+
+
+# ---------------------------------------------------------------------------
+# P-V3 fused kernel: in-kernel RNG + in-kernel cube accumulation
+# ---------------------------------------------------------------------------
+
+def _fill_fused_kernel(*refs, nstrat: int, n_cubes: int, ninc: int,
+                       chunk: int, tile: int, d: int, integrand,
+                       rng_in_kernel: bool):
+    (rng_or_u_ref, cube_ref, ew_ref, *const_refs,
+     ms_ref, mc_ref, s1_ref, s2_ref) = refs
+    if rng_in_kernel:
+        kd_ref = rng_or_u_ref
+    else:
+        u_ref = rng_or_u_ref
+    i = pl.program_id(0)
+    dtype = jnp.float32
+    cube = cube_ref[...]                        # (tile, 1) int32, sorted
+
+    if rng_in_kernel:
+        # ---- in-kernel RNG: this tile's slice of uniform(fold_in(key, g)),
+        # bit-exact (P-V3 part 1; zero per-eval input traffic) ----
+        u = _tile_uniforms(kd_ref[0, 0], kd_ref[0, 1], i * tile, tile,
+                           chunk, d)                            # (tile, d)
+    else:
+        u = u_ref[...]                                          # (tile, d)
+
+    valid = cube < n_cubes                      # (tile, 1)
+    cube_c = jnp.minimum(cube, n_cubes - 1)
+
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, ninc), 1)   # (1, ninc)
+
+    # ---- pass 1: per-dimension transform.  One STACKED gather matvec per
+    # dimension: oh @ [edges_k; widths_k]^T picks (e_lo, dx) together — half
+    # the baseline's MXU ops / VMEM passes for the table lookups. ----
+    x_cols = []
+    ohs = []                                    # kept live for pass 2 reuse
+    logjac = jnp.zeros((tile, 1), dtype)
+    for k in range(d):
+        c_k = (cube_c // (nstrat**k)) % nstrat                  # (tile, 1)
+        y_k = (c_k.astype(dtype) + u[:, k:k + 1]) / nstrat
+        yn = y_k * ninc
+        iy_k = jnp.clip(yn.astype(jnp.int32), 0, ninc - 1)      # (tile, 1)
+        frac = yn - iy_k.astype(dtype)
+        oh = (iy_k == lanes).astype(dtype)                      # (tile, ninc)
+        ed = jax.lax.dot_general(
+            oh, ew_ref[2 * k:2 * k + 2, :], (((1,), (1,)), ((), ())),
+            preferred_element_type=dtype)                       # (tile, 2)
+        e_lo = ed[:, 0:1]
+        dx = ed[:, 1:2]
+        x_cols.append(e_lo + frac * dx)
+        ohs.append(oh)
+        logjac = logjac + jnp.log(jnp.maximum(ninc * dx, _TINY))
+
+    x = jnp.concatenate(x_cols, axis=1)                         # (tile, d)
+    jac = jnp.exp(logjac)                                       # (tile, 1)
+
+    # ---- integrand evaluation (traced into the kernel; closure consts
+    # arrive as trailing refs, see ``_const_transport``) ----
+    fx = integrand(x, *[r[...] for r in const_refs])
+    fx = fx.reshape(tile, 1).astype(dtype)
+    w = jnp.where(valid, jac * fx, jnp.zeros((), dtype))        # (tile, 1)
+    w2 = w * w
+    cnt = valid.astype(dtype)
+
+    @pl.when(i == 0)
+    def _init():
+        ms_ref[...] = jnp.zeros_like(ms_ref)
+        mc_ref[...] = jnp.zeros_like(mc_ref)
+        s1_ref[...] = jnp.zeros_like(s1_ref)
+        s2_ref[...] = jnp.zeros_like(s2_ref)
+
+    # ---- pass 2: map histogram.  REUSES the pass-1 one-hots (no second
+    # construction) and contracts [w2, cnt] in ONE stacked matmul per dim
+    # (the baseline runs two). ----
+    w2cnt = jnp.concatenate([w2, cnt], axis=1)                  # (tile, 2)
+    for k in range(d):
+        m_k = jax.lax.dot_general(
+            w2cnt, ohs[k], (((0,), (0,)), ((), ())),
+            preferred_element_type=dtype)                       # (2, ninc)
+        ms_ref[k:k + 1, :] += m_k[0:1, :]
+        mc_ref[k:k + 1, :] += m_k[1:2, :]
+
+    # ---- fused cube accumulation (P-V3 part 2) ----
+    # Sorted ids advance by <= 1 per eval (every cube draws >= 2 evals), so
+    # this tile's live ids fit a contiguous window of `span` slots starting at
+    # a LANE-aligned base below the first id.  One-hot against the WINDOW
+    # (tile x span, tiny) instead of all n_cubes; masked overflow evals are
+    # clipped into the window but contribute exactly 0.
+    span = span_for_tile(tile)
+    base = (cube_c[0, 0] // LANE) * LANE                        # scalar
+    rel = jnp.clip(cube_c - base, 0, span - 1)                  # (tile, 1)
+    win = jax.lax.broadcasted_iota(jnp.int32, (1, span), 1)
+    ohc = (rel == win).astype(dtype)                            # (tile, span)
+    both = jnp.concatenate([w, w2], axis=1)                     # (tile, 2)
+    parts = jax.lax.dot_general(
+        both, ohc, (((0,), (0,)), ((), ())),
+        preferred_element_type=dtype)                           # (2, span)
+    rows_n = span // LANE
+    br = base // LANE
+    p1 = parts[0:1, :].reshape(rows_n, LANE)
+    p2 = parts[1:2, :].reshape(rows_n, LANE)
+    s1_ref[pl.ds(br, rows_n), :] += p1
+    s2_ref[pl.ds(br, rows_n), :] += p2
+
+
+def vegas_fill_fused(key_bits, cube, edges_lo, widths, *, nstrat: int,
+                     n_cubes: int, integrand, tile: int = 256,
+                     interpret: bool = True, u=None, ig_consts=()):
+    """pallas_call wrapper for the P-V3 streaming kernel (one chunk).
+
+    Args:
+      key_bits: (1, 2) uint32 raw key data of ``fold_in(key, gchunk)``.
+      cube:     (chunk, 1) int32 SORTED cube ids; ``n_cubes`` == masked.
+      edges_lo/widths: (d, ninc) f32 map tables.
+      u:        optional (chunk, d) f32 uniforms.  ``None`` (the compiled-TPU
+                default) generates them IN-KERNEL from ``key_bits`` — zero
+                per-eval input traffic.  Passing the precomputed chunk block
+                keeps the rest of the fusion but streams uniforms from HBM:
+                the interpret-mode escape hatch (XLA:CPU refuses to vectorize
+                fusion clusters polluted by the in-body threefry, a ~2x
+                pessimization measured in DESIGN.md §7 — irrelevant on real
+                TPU where Mosaic compiles the u32 rotate/xor chain natively).
+
+    Returns ``(ms, mc, s1_pad, s2_pad)`` where the cube moments come back as
+    (rows, LANE) f32 — flatten and trim to ``n_cubes``.  No per-eval output
+    exists: with in-kernel RNG the only per-eval HBM traffic is the int32
+    cube-id input; kernel output is O(d*ninc + n_cubes) state.
+    """
+    chunk = cube.shape[0]
+    d, ninc = edges_lo.shape
+    assert chunk % tile == 0, (chunk, tile)
+    assert edges_lo.dtype == jnp.float32, "fused path is f32-only (RNG contract)"
+    rows = padded_cube_rows(n_cubes, tile)
+    rng_in_kernel = u is None
+    # Interleave the two map tables (rows 2k / 2k+1 = edges_k / widths_k) so
+    # pass 1 picks both with a single stacked gather matvec per dimension.
+    ew = jnp.stack([edges_lo, widths], axis=1).reshape(2 * d, ninc)
+    kig, flat_consts, const_specs = _const_transport(integrand, ig_consts)
+
+    kernel = functools.partial(
+        _fill_fused_kernel, nstrat=nstrat, n_cubes=n_cubes, ninc=ninc,
+        chunk=chunk, tile=tile, d=d, integrand=kig,
+        rng_in_kernel=rng_in_kernel)
+    grid = (chunk // tile,)
+    first_in = (key_bits, pl.BlockSpec((1, 2), lambda i: (0, 0))) \
+        if rng_in_kernel else (u, pl.BlockSpec((tile, d), lambda i: (i, 0)))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            first_in[1],                                    # key bits | u
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),      # cube ids
+            pl.BlockSpec((2 * d, ninc), lambda i: (0, 0)),  # edges/widths
+            *const_specs,                                   # integrand consts
+        ],
+        out_specs=[
+            pl.BlockSpec((d, ninc), lambda i: (0, 0)),      # map sums
+            pl.BlockSpec((d, ninc), lambda i: (0, 0)),      # map counts
+            pl.BlockSpec((rows, LANE), lambda i: (0, 0)),   # cube s1
+            pl.BlockSpec((rows, LANE), lambda i: (0, 0)),   # cube s2
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, ninc), jnp.float32),
+            jax.ShapeDtypeStruct((d, ninc), jnp.float32),
+            jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+            jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(first_in[0], cube, ew, *flat_consts)

@@ -38,14 +38,25 @@ def main(argv=None):
     ap.add_argument("--skip", type=int, default=5)
     ap.add_argument("--config", choices=["def", "vf", "tq"], default="def")
     ap.add_argument("--backend", choices=["ref", "pallas"], default="ref")
+    ap.add_argument("--interpret", choices=["auto", "true", "false"],
+                    default="auto",
+                    help="pallas execution mode; auto = compiled on TPU, "
+                         "interpreter elsewhere (kernels.backend_default)")
+    ap.add_argument("--no-fused", dest="fused", action="store_false",
+                    help="pallas: use the P-V2 baseline kernel instead of "
+                         "the P-V3 fused streaming kernel")
+    ap.add_argument("--tile", type=int, default=None,
+                    help="pallas tile override (default: VMEM autotune)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     ig = INTEGRANDS[args.integrand]()
     base = PAPER_CONFIGS[args.config]
+    interpret = {"auto": None, "true": True, "false": False}[args.interpret]
     cfg = VegasConfig(neval=args.neval, max_it=args.iters, skip=args.skip,
                       ninc=base.ninc, alpha=base.alpha, beta=base.beta,
-                      backend=args.backend)
+                      backend=args.backend, interpret=interpret,
+                      fused_cubes=args.fused, tile=args.tile)
     t0 = time.time()
     res = run(ig, cfg, key=jax.random.PRNGKey(args.seed))
     dt = time.time() - t0

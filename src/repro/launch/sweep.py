@@ -31,6 +31,9 @@ def main(argv=None):
     ap.add_argument("--skip", type=int, default=3)
     ap.add_argument("--ninc", type=int, default=128)
     ap.add_argument("--chunk", type=int, default=16_384)
+    ap.add_argument("--backend", choices=["ref", "pallas"], default="ref",
+                    help="fill backend for every scenario (pallas = fused "
+                         "P-V3 kernel, interpret mode autodetected)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--cache", default=None,
                     help="path to an .npz map cache (warm start + refresh)")
@@ -40,7 +43,7 @@ def main(argv=None):
 
     family = FAMILIES[args.family](args.batch)
     cfg = VegasConfig(neval=args.neval, max_it=args.iters, skip=args.skip,
-                      ninc=args.ninc, chunk=args.chunk)
+                      ninc=args.ninc, chunk=args.chunk, backend=args.backend)
     key = jax.random.PRNGKey(args.seed)
     cache = MapCache(args.cache) if args.cache else None
 

@@ -76,6 +76,33 @@ def main():
             (resumed.mean, straight.mean)
         print(f"CHECK elastic OK resumed={resumed.mean:.8g} straight={straight.mean:.8g}")
 
+    # --- 5b) pallas fused backend: device-count invariance ---------------
+    # The fused kernel (in-kernel RNG + in-kernel cube accumulation) shares
+    # the chunk-keyed stream bit-for-bit with fill_reference, so the sharded
+    # fused fill must agree with BOTH the unsharded fused fill and the plain
+    # reference fill at the reduction-order tolerance.
+    cfg_p = I.VegasConfig(neval=20_000, max_it=4, skip=1, ninc=64, chunk=2048,
+                          backend="pallas", fused_cubes=True, interpret=True)
+    rc_p = cfg_p.resolve(ig.dim)
+    st_p = I.init_state(ig, rc_p, key)
+    key_p = jax.random.fold_in(st_p.key, st_p.it)
+    plain_ref = F.fill_reference(st_p.edges, st_p.n_h, key_p, ig,
+                                 nstrat=rc_p.nstrat, n_cap=rc_p.n_cap,
+                                 chunk=rc_p.chunk)
+    plain_fused = F.fill_pallas(st_p.edges, st_p.n_h, key_p, ig,
+                                nstrat=rc_p.nstrat, n_cap=rc_p.n_cap,
+                                chunk=rc_p.chunk, interpret=True,
+                                fused_cubes=True, kahan=True)
+    fused8 = SF.make_sharded_fill(mesh8, ("data",), rc_p)  # backend from cfg
+    shard_fused = fused8(st_p.edges, st_p.n_h, key_p, ig)
+    for got, want, tag in [(shard_fused, plain_fused, "sharded-vs-fused"),
+                           (shard_fused, plain_ref, "sharded-vs-ref")]:
+        np.testing.assert_allclose(got.map_sums, want.map_sums, rtol=2e-5,
+                                   err_msg=tag)
+        np.testing.assert_allclose(got.cube_s1, want.cube_s1, rtol=2e-5,
+                                   atol=1e-7, err_msg=tag)
+    print("CHECK pallas_fused_invariance OK")
+
     # --- 5) straggler re-dispatch: shard k recomputed locally ------------
     total = None
     for k8 in range(8):

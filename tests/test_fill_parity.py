@@ -1,10 +1,11 @@
-"""Backend parity sweep: ``fill_pallas`` (interpret mode) vs
-``fill_reference`` across dimensions, stratification counts, and
-non-power-of-two chunk/tile shapes.
+"""Backend parity sweep: ``fill_pallas`` (interpret mode, both the P-V2
+baseline and the P-V3 fused streaming kernel) vs ``fill_reference`` across
+dimensions, stratification counts, and non-power-of-two chunk/tile shapes.
 
-The two backends share the chunk-keyed RNG contract (DESIGN.md C5), so they
-draw IDENTICAL sample streams — tolerances cover accumulation-order f32
-drift only, never sampling differences."""
+All three paths share the chunk-keyed RNG contract (DESIGN.md C5) — the
+fused kernel regenerates the stream in-kernel bit-for-bit — so they draw
+IDENTICAL samples: tolerances cover accumulation-order f32 drift only,
+never sampling differences."""
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +22,7 @@ def _ig(x):
 
 
 def _assert_fill_parity(dim, nstrat, chunk, n_chunks, tile, ninc=32,
-                        adapted=True):
+                        adapted=True, neval=None):
     n_cubes = nstrat**dim
     n_cap = chunk * n_chunks
     key = jax.random.PRNGKey(dim * 100 + nstrat)
@@ -34,21 +35,27 @@ def _assert_fill_parity(dim, nstrat, chunk, n_chunks, tile, ninc=32,
             [jnp.zeros((dim, 1)), jnp.cumsum(w, axis=1)], axis=1)
     else:
         edges = vmap_.uniform_edges([0.0] * dim, [1.0] * dim, ninc)
-    n_h = strat.uniform_nh(max(n_cap - n_cubes, n_cubes * 2), n_cubes)
+    if neval is None:
+        neval = max(n_cap - n_cubes, n_cubes * 2)
+    n_h = strat.uniform_nh(neval, n_cubes)
 
     ref = fill_mod.fill_reference(edges, n_h, key, _ig, nstrat=nstrat,
                                   n_cap=n_cap, chunk=chunk)
-    pal = fill_mod.fill_pallas(edges, n_h, key, _ig, nstrat=nstrat,
-                               n_cap=n_cap, chunk=chunk, interpret=True,
-                               tile=tile)
-    for field in ("map_sums", "map_counts", "cube_s1", "cube_s2"):
-        a = np.asarray(getattr(ref, field))
-        b = np.asarray(getattr(pal, field))
-        scale = np.abs(a).max() or 1.0
-        np.testing.assert_allclose(
-            b, a, rtol=1e-4, atol=1e-5 * scale,
-            err_msg=f"{field} dim={dim} nstrat={nstrat} chunk={chunk} "
-                    f"tile={tile}")
+    # (fused, rng_in_kernel): P-V2 baseline, P-V3 hybrid (CPU default), and
+    # P-V3 with in-kernel RNG (the compiled-TPU program, run interpreted).
+    for fused, rng in ((False, None), (True, None), (True, True)):
+        pal = fill_mod.fill_pallas(edges, n_h, key, _ig, nstrat=nstrat,
+                                   n_cap=n_cap, chunk=chunk, interpret=True,
+                                   fused_cubes=fused, tile=tile,
+                                   rng_in_kernel=rng)
+        for field in ("map_sums", "map_counts", "cube_s1", "cube_s2"):
+            a = np.asarray(getattr(ref, field))
+            b = np.asarray(getattr(pal, field))
+            scale = np.abs(a).max() or 1.0
+            np.testing.assert_allclose(
+                b, a, rtol=1e-4, atol=1e-5 * scale,
+                err_msg=f"{field} fused={fused} rng_in_kernel={rng} dim={dim} "
+                        f"nstrat={nstrat} chunk={chunk} tile={tile}")
 
 
 @pytest.mark.parametrize("dim", [1, 2, 4])
@@ -75,7 +82,30 @@ def test_fill_parity_uniform_map_exactish():
                         adapted=False)
 
 
-def test_backend_configs_agree_through_full_run():
+def test_fill_parity_odd_chunk_times_dim():
+    """chunk*d odd exercises the padded-counter branch of the in-kernel RNG
+    (jax pads one zero before splitting the iota into cipher halves)."""
+    _assert_fill_parity(dim=3, nstrat=2, chunk=45, n_chunks=3, tile=45)
+
+
+def test_fill_parity_masked_tail_heavy():
+    """Most of the eval axis past the active total: whole tiles of overflow
+    evals at the n_cap pad must contribute exactly zero in every backend."""
+    dim, nstrat, chunk, n_chunks = 2, 3, 256, 4
+    n_cubes = nstrat**dim
+    # active total ~ one third of n_cap: the last ~2.7 chunks are all-masked
+    _assert_fill_parity(dim, nstrat, chunk, n_chunks, tile=64,
+                        neval=max(chunk * n_chunks // 3, 2 * n_cubes))
+
+
+def test_fill_parity_cubes_not_tile_multiple():
+    """n_cubes (3^4 = 81) far from any tile multiple: the fused kernel's
+    LANE-padded accumulator must trim back to exactly n_cubes."""
+    _assert_fill_parity(dim=4, nstrat=3, chunk=512, n_chunks=2, tile=128)
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_backend_configs_agree_through_full_run(fused):
     """End-to-end: a full adapted run under each backend lands within
     combined statistical error (identical streams, different accumulation)."""
     from repro.core import VegasConfig, run
@@ -83,7 +113,7 @@ def test_backend_configs_agree_through_full_run():
     ig = igs.make_cosine(dim=3)
     kw = dict(neval=12_000, max_it=6, skip=2, ninc=32, chunk=4096)
     r_ref = run(ig, VegasConfig(backend="ref", **kw), key=jax.random.PRNGKey(4))
-    r_pal = run(ig, VegasConfig(backend="pallas", **kw),
+    r_pal = run(ig, VegasConfig(backend="pallas", fused_cubes=fused, **kw),
                 key=jax.random.PRNGKey(4))
     comb = float(np.hypot(r_ref.sdev, r_pal.sdev))
     assert abs(r_ref.mean - r_pal.mean) < 3 * comb

@@ -1,0 +1,327 @@
+"""P-V3 fused streaming fill: RNG contract, fused-kernel oracle parity,
+memory-footprint (jaxpr) checks, and interpret-mode autodetection.
+
+The headline invariants of the fused path (kernels/vegas_fill.py,
+DESIGN.md §7):
+  * in-kernel uniforms == ``jax.random.uniform(fold_in(key, g), (chunk, d))``
+    BIT-FOR-BIT, under both threefry counter layouts;
+  * no per-eval float array exists anywhere in the traced program — HBM
+    traffic is the sorted int32 cube-id input plus O(accumulators);
+  * FillResults match ``fill_reference`` at the standard parity tolerances
+    (exercised by tests/test_fill_parity.py's three-way sweep).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels as K
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels import vegas_fill as vk
+
+
+def _ig(x):
+    return jnp.sum(x * x, axis=-1) + 1.0
+
+
+# ---------------------------------------------------------------------------
+# RNG contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk,d,tile", [
+    (256, 4, 64),     # pow2 everything
+    (100, 3, 50),     # nothing a power of two
+    (96, 2, 96),      # single tile == chunk
+    (25, 3, 25),      # chunk*d odd: the padded-counter path
+    (512, 1, 128),    # d=1
+])
+@pytest.mark.parametrize("partitionable", [True, False])
+def test_inkernel_uniforms_bitexact(chunk, d, tile, partitionable):
+    """In-kernel tile uniforms reassemble to uniform(fold_in(key, g)) exactly
+    (not allclose: np.array_equal on the raw f32 bits)."""
+    old = bool(jax.config.jax_threefry_partitionable)
+    jax.config.update("jax_threefry_partitionable", partitionable)
+    try:
+        key = jax.random.PRNGKey(7)
+        for g in (0, 5):
+            k = jax.random.fold_in(key, g)
+            expected = jax.random.uniform(k, (chunk, d), dtype=jnp.float32)
+            got = vk.chunk_uniforms(kops.key_bits(k), chunk=chunk, d=d,
+                                    tile=tile)
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(expected))
+    finally:
+        jax.config.update("jax_threefry_partitionable", old)
+
+
+def test_inkernel_uniforms_tile_invariant():
+    """The tile decomposition does not change the stream: any tile size that
+    divides the chunk reproduces the same (chunk, d) block."""
+    key = jax.random.fold_in(jax.random.PRNGKey(3), 2)
+    kb = kops.key_bits(key)
+    whole = vk.chunk_uniforms(kb, chunk=240, d=3)
+    for tile in (240, 120, 80, 48, 16):
+        np.testing.assert_array_equal(
+            np.asarray(vk.chunk_uniforms(kb, chunk=240, d=3, tile=tile)),
+            np.asarray(whole))
+
+
+def test_typed_key_bits_roundtrip():
+    """key_bits handles both legacy raw and new-style typed keys."""
+    raw = jax.random.PRNGKey(11)
+    typed = jax.random.key(11)
+    np.testing.assert_array_equal(np.asarray(kops.key_bits(raw)),
+                                  np.asarray(kops.key_bits(typed)))
+
+
+# ---------------------------------------------------------------------------
+# Fused kernel vs oracle (sorted ids, masked tail, odd n_cubes)
+# ---------------------------------------------------------------------------
+
+def _sorted_inputs(key, chunk, d, ninc, nstrat, n_live):
+    """Sorted cube ids with a masked overflow tail, as ops.fill produces."""
+    n_cubes = nstrat**d
+    ids = jnp.sort(jax.random.randint(key, (n_live,), 0, n_cubes,
+                                      dtype=jnp.int32))
+    cube = jnp.concatenate(
+        [ids, jnp.full((chunk - n_live,), n_cubes, jnp.int32)])
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (d, ninc),
+                           minval=0.05, maxval=1.0)
+    w = w / w.sum(1, keepdims=True)
+    edges_lo = jnp.concatenate(
+        [jnp.zeros((d, 1)), jnp.cumsum(w, 1)[:, :-1]], axis=1)
+    return cube.reshape(chunk, 1), edges_lo, w, n_cubes
+
+
+@pytest.mark.parametrize("chunk,d,ninc,nstrat,tile,n_live", [
+    (256, 3, 32, 3, 128, 200),    # n_cubes=27: far from a tile multiple
+    (256, 2, 64, 5, 64, 256),     # no masked tail
+    (384, 4, 50, 2, 96, 120),     # mostly masked; ninc not a power of two
+    (128, 1, 16, 7, 128, 100),    # d=1
+])
+def test_fused_kernel_matches_oracle(chunk, d, ninc, nstrat, tile, n_live):
+    """vegas_fill_fused == fused oracle when fed identical uniforms.
+
+    Note: random sorted ids may repeat a cube more than ``tile`` times but
+    never skip backwards, so each tile still touches a contiguous id window —
+    the same invariant ops.fill's searchsorted ids satisfy.
+    """
+    key = jax.random.PRNGKey(chunk + d)
+    cube, edges_lo, widths, n_cubes = _sorted_inputs(
+        key, chunk, d, ninc, nstrat, n_live)
+    k = jax.random.fold_in(key, 9)
+    u = vk.chunk_uniforms(kops.key_bits(k), chunk=chunk, d=d)
+    ms_r, mc_r, s1_r, s2_r = kref.vegas_fill_fused_ref(
+        u, cube, edges_lo, widths, nstrat=nstrat, n_cubes=n_cubes,
+        integrand=_ig)
+    ms, mc, s1p, s2p = vk.vegas_fill_fused(
+        kops.key_bits(k).reshape(1, 2), cube, edges_lo, widths,
+        nstrat=nstrat, n_cubes=n_cubes, integrand=_ig, tile=tile,
+        interpret=True)
+    s1 = s1p.reshape(-1)[:n_cubes]
+    s2 = s2p.reshape(-1)[:n_cubes]
+    for got, want, tag in [(ms, ms_r, "ms"), (mc, mc_r, "mc"),
+                           (s1, s1_r, "s1"), (s2, s2_r, "s2")]:
+        scale = float(np.abs(np.asarray(want)).max()) or 1.0
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5 * scale, err_msg=tag)
+    # the pad region beyond n_cubes holds only clipped zero contributions
+    assert float(jnp.abs(s1p.reshape(-1)[n_cubes:]).max(initial=0.0)) == 0.0
+
+
+def test_fused_kernel_all_masked():
+    """Every eval in the overflow bucket -> all accumulators exactly zero."""
+    chunk, d, ninc, nstrat = 128, 2, 16, 3
+    cube, edges_lo, widths, n_cubes = _sorted_inputs(
+        jax.random.PRNGKey(0), chunk, d, ninc, nstrat, n_live=0)
+    ms, mc, s1p, s2p = vk.vegas_fill_fused(
+        kops.key_bits(jax.random.PRNGKey(1)).reshape(1, 2), cube, edges_lo,
+        widths, nstrat=nstrat, n_cubes=n_cubes, integrand=_ig, tile=64,
+        interpret=True)
+    for a in (ms, mc, s1p, s2p):
+        assert float(jnp.abs(a).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Memory footprint: the fused jaxpr has no per-eval float array
+# ---------------------------------------------------------------------------
+
+def _float_dims(jaxpr, dims):
+    """Collect every dimension of every float aval in jaxpr, recursively
+    (scan bodies, pallas kernel jaxprs, closed calls)."""
+    from jax.core import Jaxpr, ClosedJaxpr
+
+    def visit(p):
+        if isinstance(p, ClosedJaxpr):
+            visit(p.jaxpr)
+            return
+        if not isinstance(p, Jaxpr):
+            if isinstance(p, (list, tuple)):
+                for x in p:
+                    visit(x)
+            elif isinstance(p, dict):
+                for x in p.values():
+                    visit(x)
+            return
+        for eqn in p.eqns:
+            for v in list(eqn.invars) + list(eqn.outvars):
+                aval = getattr(v, "aval", None)
+                if (aval is not None and hasattr(aval, "shape")
+                        and hasattr(aval, "dtype")
+                        and jnp.issubdtype(aval.dtype, jnp.floating)):
+                    dims.update(aval.shape)
+            for param in eqn.params.values():
+                visit(param)
+
+    visit(jaxpr)
+    return dims
+
+
+def _fill_jaxpr(fused: bool, *, chunk=2048, n_chunks=4, d=2, ninc=32,
+                nstrat=3, rng_in_kernel=None):
+    from repro.core import map as vmap_
+    from repro.core import strat
+    n_cubes = nstrat**d
+    n_cap = chunk * n_chunks
+    edges = vmap_.uniform_edges([0.0] * d, [1.0] * d, ninc)
+    n_h = strat.uniform_nh(n_cap - n_cubes, n_cubes)
+    closed = jax.make_jaxpr(
+        lambda e, nh, k: kops.fill(e, nh, k, _ig, nstrat=nstrat, n_cap=n_cap,
+                                   chunk=chunk, interpret=True,
+                                   fused_cubes=fused, tile=256,
+                                   rng_in_kernel=rng_in_kernel))(
+        edges, n_h, jax.random.PRNGKey(0))
+    return closed, chunk, n_cap
+
+
+def test_fused_jaxpr_has_no_per_eval_float_array():
+    """Acceptance check on the streaming program (in-kernel RNG, what runs
+    compiled on TPU): NO float array with a dimension at chunk scale or above
+    exists — neither the (chunk, d) uniforms nor the (chunk, 1) weight output
+    survive the fusion (the only chunk-sized array left is the int32 cube-id
+    input).  The baseline program, by contrast, still materializes both."""
+    fused, chunk, n_cap = _fill_jaxpr(fused=True, rng_in_kernel=True)
+    dims = _float_dims(fused.jaxpr, set())
+    assert max(dims) < chunk, f"per-eval float array leaked: dims={dims}"
+
+    baseline, chunk, n_cap = _fill_jaxpr(fused=False)
+    dims_b = _float_dims(baseline.jaxpr, set())
+    assert max(dims_b) >= chunk, "baseline should materialize per-chunk floats"
+
+
+def test_fused_hybrid_jaxpr_has_no_weight_output():
+    """The interpret-mode hybrid (uniforms precomputed per chunk, everything
+    else fused) still has no per-eval WEIGHT array: its only chunk-sized
+    float is the uniforms input block."""
+    hybrid, chunk, n_cap = _fill_jaxpr(fused=True, rng_in_kernel=False)
+    dims = _float_dims(hybrid.jaxpr, set())
+    assert max(dims) <= chunk, f"beyond-chunk float array leaked: dims={dims}"
+    # chunk-sized floats exist (u) but only with the d-column shape — the
+    # (chunk, 1) weight output shape must be gone.
+    shapes = set()
+
+    from jax.core import Jaxpr, ClosedJaxpr
+
+    def visit(p):
+        if isinstance(p, ClosedJaxpr):
+            return visit(p.jaxpr)
+        if isinstance(p, (list, tuple)):
+            return [visit(x) for x in p]
+        if isinstance(p, dict):
+            return [visit(x) for x in p.values()]
+        if not isinstance(p, Jaxpr):
+            return
+        for eqn in p.eqns:
+            for v in list(eqn.invars) + list(eqn.outvars):
+                aval = getattr(v, "aval", None)
+                if (aval is not None and getattr(aval, "shape", None)
+                        and hasattr(aval, "dtype")
+                        and jnp.issubdtype(aval.dtype, jnp.floating)):
+                    shapes.add(tuple(aval.shape))
+            for param in eqn.params.values():
+                visit(param)
+
+    visit(hybrid.jaxpr)
+    assert (chunk, 1) not in shapes, "per-eval weight array leaked"
+
+
+def test_fused_jaxpr_no_ncap_array_any_dtype():
+    """Scan-chunking keeps EVERY array (any dtype) below n_cap: live memory
+    is bounded by one chunk, not by the eval capacity."""
+    from jax.core import Jaxpr, ClosedJaxpr
+
+    closed, chunk, n_cap = _fill_jaxpr(fused=True)
+    dims = set()
+
+    def visit(p):
+        if isinstance(p, ClosedJaxpr):
+            return visit(p.jaxpr)
+        if isinstance(p, (list, tuple)):
+            return [visit(x) for x in p]
+        if isinstance(p, dict):
+            return [visit(x) for x in p.values()]
+        if not isinstance(p, Jaxpr):
+            return
+        for eqn in p.eqns:
+            for v in list(eqn.invars) + list(eqn.outvars):
+                aval = getattr(v, "aval", None)
+                if aval is not None and getattr(aval, "shape", None):
+                    dims.update(aval.shape)
+            for param in eqn.params.values():
+                visit(param)
+
+    visit(closed.jaxpr)
+    assert max(dims) < n_cap, f"n_cap-sized array leaked: {sorted(dims)[-3:]}"
+
+
+# ---------------------------------------------------------------------------
+# interpret autodetect + tile autotune
+# ---------------------------------------------------------------------------
+
+def test_backend_default_and_resolve_on_cpu(caplog):
+    assert jax.default_backend() == "cpu"
+    assert K.backend_default() == "interpret"
+    K._announce.cache_clear()
+    with caplog.at_level("INFO", logger="repro.kernels"):
+        assert K.resolve_interpret(None) is True
+        assert K.resolve_interpret(True) is True
+        assert K.resolve_interpret(False) is False  # honored but warned
+    text = caplog.text
+    assert "INTERPRET on platform=cpu" in text
+    assert "autodetected" in text
+    assert "only supported on TPU" in text  # the loud explicit-False warning
+    K._announce.cache_clear()
+
+
+def test_config_interpret_none_runs_end_to_end():
+    """VegasConfig's default interpret=None autodetects and completes a tiny
+    fused pallas run on CPU."""
+    from repro.core import VegasConfig, run
+    from repro.core import integrands as igs
+    ig = igs.make_cosine(dim=2)
+    r = run(ig, VegasConfig(neval=4_000, max_it=3, ninc=16, chunk=2048,
+                            backend="pallas"),
+            key=jax.random.PRNGKey(0))
+    assert np.isfinite(r.mean) and r.n_it == 3
+
+
+@pytest.mark.parametrize("chunk,d,ninc", [
+    (16_384, 4, 1024), (2048, 2, 32), (100, 3, 50), (16_384, 16, 1024),
+])
+def test_autotune_tile_divides_and_fits(chunk, d, ninc):
+    t = kops.autotune_tile(chunk, d, ninc, n_cubes=4096)
+    assert chunk % t == 0 and 1 <= t <= 1024
+    span = vk.span_for_tile(t)
+    assert 4 * (d * t * ninc + t * span + 8 * t * d + 3 * d * ninc) <= 8 << 20
+
+
+def test_fused_rejects_non_f32():
+    from repro.core import map as vmap_
+    from repro.core import strat
+    edges = vmap_.uniform_edges([0.0, 0.0], [1.0, 1.0], 16)
+    n_h = strat.uniform_nh(512, 9)
+    with pytest.raises(ValueError, match="f32-only"):
+        kops.fill(edges, n_h, jax.random.PRNGKey(0), _ig, nstrat=3,
+                  n_cap=512, chunk=512, dtype=jnp.float16, fused_cubes=True)
