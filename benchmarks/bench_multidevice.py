@@ -7,7 +7,7 @@ reports the two quantities that ARE meaningful in the dry-run setting:
   * per-device eval count (work drops 1/n — the paper's C1 balance), and
   * psum'd accumulator bytes (constant in n_eval — the Amdahl argument that
     gave cuVegas 0.85 efficiency at 8 GPUs, Table 8).
-Real-TPU wall-clock scaling is captured by the roofline collective term.
+Real-TPU wall-clock scaling is a hardware measurement, not reproducible here.
 """
 
 from __future__ import annotations

@@ -1,0 +1,54 @@
+"""End-to-end run benchmark: the whole VEGAS+ program through the unified
+engine (plan -> execute), not just the fill phase.
+
+Where BENCH_fill.json tracks the kernel trajectory (DESIGN.md §7), these
+rows track what a user actually pays: full `core.run` wall clock — fill,
+adaptation, aggregation, loop dispatch — per backend, plus the vmapped
+batch program.  ``benchmarks.run --json`` extracts every ``run/*`` row into
+``BENCH_run.json`` next to the fill artifact.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.batch import run_batch
+from repro.batch.family import make_gaussian_family
+from repro.core import VegasConfig
+from repro.core import run as core_run
+from repro.core.integrands import make_cosine, make_roos_arnold
+from repro.engine import ExecutionConfig
+from .common import emit, timeit
+
+
+def run(fast=True):
+    neval = 100_000 if fast else 1_000_000
+    max_it = 6 if fast else 15
+    base = dict(neval=neval, max_it=max_it, skip=2, ninc=256,
+                chunk=min(neval, 1 << 14))
+    key = jax.random.PRNGKey(0)
+
+    for name, ig in [("roos_arnold", make_roos_arnold()),
+                     ("cosine_d6", make_cosine(dim=6))]:
+        for backend in ("ref", "pallas-fused"):
+            cfg = VegasConfig(execution=ExecutionConfig(backend=backend),
+                              **base)
+            t = timeit(lambda: core_run(ig, cfg, key=key), repeats=3,
+                       warmup=1)
+            emit(f"run/{name}/{backend}", t,
+                 f"evals_per_s={neval * max_it / t:,.0f}",
+                 n_eval=neval, backend=backend, max_it=max_it)
+
+    # The batched whole-run program (B scenarios, one jitted fori_loop).
+    b = 4
+    fam = make_gaussian_family(np.linspace(0.2, 0.8, b))
+    cfg = VegasConfig(**base)
+    t = timeit(lambda: run_batch(fam, cfg, key=key), repeats=3, warmup=1)
+    emit(f"run/gaussian_family/B={b}/ref", t,
+         f"evals_per_s={b * neval * max_it / t:,.0f}",
+         n_eval=neval, backend="ref", max_it=max_it, batch=b)
+
+
+if __name__ == "__main__":
+    run()

@@ -9,9 +9,11 @@ uses paper-scale parameters.
 
 ``--json OUT.json`` additionally writes every row as a structured record
 (name, us_per_call, derived, n_eval, backend where known) plus run metadata
-(git sha, jax version/backend, mode) — and extracts the fill rows into
-``BENCH_fill.json`` next to it: the perf-trajectory artifact DESIGN.md §7
-tracks across PRs.
+(git sha, jax version/backend, mode) — and extracts two trajectory
+artifacts next to it: the fill rows into ``BENCH_fill.json`` (the kernel
+trajectory DESIGN.md §7 tracks across PRs) and the end-to-end ``run/*``
+rows into ``BENCH_run.json`` (whole-run wall clock per backend,
+benchmarks/bench_runs.py).
 
 ``--gate-fill`` turns the P-V2 vs P-V3 comparison into a regression gate:
 exit nonzero if any ``fill_fused`` row is slower than its ``fill_pallas``
@@ -30,6 +32,11 @@ import time
 def fill_rows(rows: list[dict]) -> list[dict]:
     """The fill perf-trajectory subset: every row timing a fill variant."""
     return [r for r in rows if "/fill" in r["name"]]
+
+
+def run_rows(rows: list[dict]) -> list[dict]:
+    """The end-to-end trajectory subset: whole-run timings (bench_runs.py)."""
+    return [r for r in rows if r["name"].startswith("run/")]
 
 
 def gate_fill(rows: list[dict]) -> list[str]:
@@ -65,7 +72,7 @@ def main() -> None:
     only = set(filter(None, args.only.split(",")))
 
     from . import (bench_applications, bench_batch, bench_breakdown,
-                   bench_integrands, bench_lm_step, bench_multidevice,
+                   bench_integrands, bench_multidevice, bench_runs,
                    bench_scaling, bench_stratification)
     from . import common
 
@@ -77,7 +84,7 @@ def main() -> None:
         "table8": bench_multidevice,
         "table9_10": bench_applications,
         "batch": bench_batch,
-        "lm": bench_lm_step,
+        "run": bench_runs,
     }
     common.reset_rows()
     print("name,us_per_call,derived")
@@ -103,14 +110,18 @@ def main() -> None:
         }
         with open(args.json, "w") as f:
             json.dump(meta, f, indent=1)
-        frows = fill_rows(common.ROWS)
-        if frows:
-            fill_path = os.path.join(os.path.dirname(os.path.abspath(args.json)),
-                                     "BENCH_fill.json")
-            with open(fill_path, "w") as f:
+        out_dir = os.path.dirname(os.path.abspath(args.json))
+        wrote = [args.json]
+        for fname, subset in [("BENCH_fill.json", fill_rows(common.ROWS)),
+                              ("BENCH_run.json", run_rows(common.ROWS))]:
+            if not subset:
+                continue
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
                 json.dump({**{k: v for k, v in meta.items() if k != "rows"},
-                           "rows": frows}, f, indent=1)
-            print(f"# wrote {args.json} and {fill_path}", file=sys.stderr)
+                           "rows": subset}, f, indent=1)
+            wrote.append(path)
+        print(f"# wrote {' and '.join(wrote)}", file=sys.stderr)
 
     if args.gate_fill:
         failures = gate_fill(common.ROWS)

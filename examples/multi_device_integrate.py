@@ -1,5 +1,7 @@
-"""Multi-device VEGAS+ (paper §3.4/§4.4 on a JAX mesh): shard the fill over
-all local devices via shard_map, with checkpoint + elastic resume.
+"""Multi-device VEGAS+ (paper §3.4/§4.4 on a JAX mesh): the execution engine
+composes the sharded fill (shard_map over all local devices) with a
+checkpoint policy — one ExecutionConfig instead of hand-wired fill_fn +
+callback plumbing (DESIGN.md §9).
 
 Run with forced host devices to see the multi-device path on CPU:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -14,28 +16,29 @@ import jax
 from repro.core import VegasConfig, run
 from repro.core.integrands import make_ridge
 from repro.dist.checkpoint import CheckpointManager
-from repro.dist.sharded_fill import make_sharded_fill
+from repro.engine import CheckpointPolicy, ExecutionConfig, make_plan
 from repro.launch.mesh import make_local_mesh
 
 print(f"devices: {jax.device_count()}")
 mesh = make_local_mesh()
 
 ig = make_ridge(dim=4, n_peaks=100)
-cfg = VegasConfig(neval=200_000, max_it=12, skip=4, ninc=512)
-rc = cfg.resolve(ig.dim)
-fill = make_sharded_fill(mesh, ("data",), rc)
 
 with tempfile.TemporaryDirectory() as td:
-    mgr = CheckpointManager(td)
+    execution = ExecutionConfig(mesh=mesh,
+                                checkpoint=CheckpointPolicy(directory=td))
+    cfg = VegasConfig(neval=200_000, max_it=12, skip=4, ninc=512,
+                      execution=execution)
+    print(make_plan(ig, cfg).describe())
     t0 = time.time()
-    r = run(ig, cfg, key=jax.random.PRNGKey(0), fill_fn=fill,
-            checkpoint_cb=lambda it, s: mgr.save(it, s))
+    r = run(ig, cfg, key=jax.random.PRNGKey(0))
     print(f"sharded result: {r}")
     print(f"target {ig.target:.6g}, pull {(r.mean - ig.target)/r.sdev:+.2f}, "
           f"{time.time()-t0:.1f}s")
 
     # elastic resume demo: restore the 12-iteration state, run 4 more
-    restored, step, _ = mgr.restore_latest(r.state)
-    cfg2 = VegasConfig(neval=200_000, max_it=16, skip=4, ninc=512)
-    r2 = run(ig, cfg2, key=jax.random.PRNGKey(0), state=restored, fill_fn=fill)
+    restored, step, _ = CheckpointManager(td).restore_latest(r.state)
+    cfg2 = VegasConfig(neval=200_000, max_it=16, skip=4, ninc=512,
+                       execution=execution)
+    r2 = run(ig, cfg2, key=jax.random.PRNGKey(0), state=restored)
     print(f"resumed +4 iterations: {r2}")

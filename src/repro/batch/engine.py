@@ -1,14 +1,14 @@
 """Batched multi-integrand engine: one XLA program, B scenarios.
 
-``run_batch`` lifts the single-scenario on-device iteration loop
-(``core.integrator.run_loop``, DESIGN.md B1) over the batch axis of an
-:class:`~repro.batch.family.IntegrandFamily` with ``jax.vmap`` (B2): B
-parameterized integrands draw, adapt their importance maps, re-allocate
-their stratifications, and aggregate — concurrently, inside a single jitted
-program with zero host round-trips.  This is the throughput shape the
-ROADMAP's "as many scenarios as you can imagine" asks for: the accelerator
-sees one big batched fill instead of B small sequential ones, so the
-batched wall clock beats the serial loop (benchmarks/bench_batch.py).
+``run_batch`` is a thin adapter over the unified execution engine
+(`repro.engine`, DESIGN.md §9): it plans the family workload on the vmap
+batch axis and executes the whole iteration loop (`core.run_loop`, B1/B2)
+as ONE jitted program — B parameterized integrands draw, adapt their
+importance maps, re-allocate their stratifications, and aggregate
+concurrently, with zero host round-trips.  Compose with the other plan axes
+through ``ExecutionConfig``: a pallas backend, a device mesh (sharded fill
+per scenario — B integrands × D devices in one program), a warm-start map
+cache.
 
 Per-scenario RNG: scenario ``b`` runs from ``fold_in(key, b)``, so its
 stream is exactly what a serial ``core.run(family.instance(b), cfg,
@@ -29,7 +29,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import integrator as core
-from repro.core import map as vmap_
 from .cache import MapCache
 from .family import IntegrandFamily
 
@@ -66,61 +65,40 @@ def scenario_keys(key, batch_size: int) -> jax.Array:
         jnp.arange(batch_size))
 
 
-def _batched_program(family: IntegrandFamily, cfg: core.ResolvedConfig):
-    """Build the jitted vmapped whole-run program for one family/config."""
-
-    def one(params, key_b, edges0):
-        ig = family.bind(params)
-        st = core.init_state(ig, cfg, key_b)
-        st = core.VegasState(edges0, st.n_h, st.key, st.it, st.results)
-        st = core.run_loop(st, ig, cfg, 0)
-        mean, sdev, chi2_dof, n_used = core.combine_results(
-            st.results, cfg.skip, cfg.max_it)
-        return st, mean, sdev, chi2_dof, n_used
-
-    return jax.jit(jax.vmap(one))
-
-
 def run_batch(family: IntegrandFamily, cfg: core.VegasConfig | None = None, *,
-              key=None, cache: MapCache | None = None) -> BatchResult:
+              key=None, cache: MapCache | None = None,
+              execution=None) -> BatchResult:
     """Integrate all B scenarios of ``family`` in one jitted program.
 
     The per-iteration estimates, adaptation, and the final inverse-variance
     combination all happen on device; the host sees only the O(B·KB) result
     pytree once, after the loop.  ``cache`` (optional) warm-starts every
     scenario's importance map from the last converged run of the same
-    (family, config) and refreshes the cache afterwards.
+    (family, config) and refreshes the cache afterwards.  ``execution``
+    (optional `repro.engine.ExecutionConfig`) overrides the config's
+    execution axes — e.g. ``ExecutionConfig(backend='pallas-fused',
+    mesh=make_local_mesh())`` runs the sharded batched program.
     """
-    rcfg = (cfg or core.VegasConfig()).resolve(family.dim)
-    key = key if key is not None else jax.random.PRNGKey(0)
-    b = family.batch_size
-
-    edges0 = cache.get(family, rcfg) if cache is not None else None
-    warm = edges0 is not None
-    if edges0 is None:
-        uni = vmap_.uniform_edges(family.lower, family.upper, rcfg.ninc,
-                                  jnp.dtype(rcfg.dtype))
-        edges0 = jnp.broadcast_to(uni, (b,) + uni.shape)
-
-    prog = _batched_program(family, rcfg)
-    states, mean, sdev, chi2_dof, n_used = prog(
-        family.params, scenario_keys(key, b), edges0)
-
-    if cache is not None:
-        cache.put(family, rcfg, states.edges)
-
-    sig2 = np.asarray(states.results[:, :, 1])
-    return BatchResult(np.asarray(mean), np.asarray(sdev),
-                       np.asarray(chi2_dof), np.asarray(n_used),
-                       np.asarray(states.results[:, :, 0]), np.sqrt(sig2),
-                       states, warm_started=warm)
+    from repro.engine import execute, make_plan
+    plan = make_plan(family, cfg, execution=execution)
+    if not plan.batched:
+        raise ValueError(
+            "run_batch is the vmapped path; the plan resolved to "
+            "batch='serial' — call run_serial (or repro.engine.execute) "
+            "instead")
+    return execute(plan, key=key, cache=cache)
 
 
 def run_serial(family: IntegrandFamily, cfg: core.VegasConfig | None = None, *,
-               key=None) -> list[core.VegasResult]:
-    """The B scenarios as B independent ``core.run`` calls — the baseline the
-    batched engine is measured against (same per-scenario keys)."""
-    key = key if key is not None else jax.random.PRNGKey(0)
-    return [core.run(family.instance(b), cfg,
-                     key=jax.random.fold_in(key, b))
-            for b in range(family.batch_size)]
+               key=None, execution=None) -> list[core.VegasResult]:
+    """The B scenarios as B independent single-scenario runs — the baseline
+    the batched engine is measured against (same per-scenario keys:
+    ``fold_in(key, b)``).  Thin adapter over the engine's ``batch='serial'``
+    plan, so both family paths share one validated implementation."""
+    import dataclasses
+
+    from repro.engine import execute, make_plan
+    cfg = cfg or core.VegasConfig()
+    execution = dataclasses.replace(execution or cfg.execution,
+                                    batch="serial")
+    return execute(make_plan(family, cfg, execution=execution), key=key)

@@ -1,49 +1,6 @@
-"""Config registry: one module per assigned architecture (+ vegas configs).
+"""Config registry: the paper's VEGAS parameter configurations (vegas.py).
 
-``get(arch_id)`` returns the full-size ArchConfig; ``get_reduced(arch_id)``
-returns the same-family reduced config used by CPU smoke tests.
-"""
-
-from __future__ import annotations
-
-import importlib
-
-ARCHS = [
-    "llama_3_2_vision_11b",
-    "yi_6b",
-    "mistral_large_123b",
-    "h2o_danube3_4b",
-    "smollm_135m",
-    "mamba2_1_3b",
-    "jamba_1_5_large_398b",
-    "musicgen_large",
-    "phi3_5_moe_42b",
-    "kimi_k2_1t",
-]
-
-# canonical ids as given in the assignment -> module names
-ALIASES = {
-    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
-    "yi-6b": "yi_6b",
-    "mistral-large-123b": "mistral_large_123b",
-    "h2o-danube-3-4b": "h2o_danube3_4b",
-    "smollm-135m": "smollm_135m",
-    "mamba2-1.3b": "mamba2_1_3b",
-    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
-    "musicgen-large": "musicgen_large",
-    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b",
-    "kimi-k2-1t-a32b": "kimi_k2_1t",
-}
-
-
-def _module(arch_id: str):
-    name = ALIASES.get(arch_id, arch_id.replace("-", "_").replace(".", "_"))
-    return importlib.import_module(f"repro.configs.{name}")
-
-
-def get(arch_id: str):
-    return _module(arch_id).CONFIG
-
-
-def get_reduced(arch_id: str):
-    return _module(arch_id).reduced()
+The seed repo's LLM architecture configs (and the models/train/serve stack
+they parameterized) were removed in PR 4 — they shared nothing with the
+integration engine and no tier-1 test or engine code imported them
+(DESIGN.md §8 deviations)."""

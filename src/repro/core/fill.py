@@ -131,7 +131,9 @@ def fill_pallas(edges, n_h, key, integrand, *, nstrat: int, n_cap: int,
                      rng_in_kernel=rng_in_kernel)
 
 
-BACKENDS = {"ref": fill_reference, "pallas": fill_pallas}
+# Backend selection lives in the capability-declaring registry
+# (repro.engine.backends): 'ref' -> fill_reference, 'pallas' (P-V2) and
+# 'pallas-fused' (P-V3) -> fill_pallas with the fusion knob pinned.
 
 
 def estimate_from_cubes(res: FillResult, n_h: jax.Array):

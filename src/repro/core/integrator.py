@@ -10,35 +10,106 @@ streams for this).
 from __future__ import annotations
 
 import dataclasses
-import functools
+import warnings
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.engine.config import LEGACY_EXEC_FIELDS, ExecutionConfig
 
 from . import fill as fill_mod
 from . import map as vmap_
 from . import strat
 from .integrands import Integrand
 
+_ALGO_FIELDS = (
+    ("neval", 100_000),       # target integrand evaluations / iteration
+    ("max_it", 20),           # max_it
+    ("skip", 0),              # iterations excluded from the final combine
+    ("ninc", 1024),           # n_intervals of the importance map
+    ("alpha", 0.5),           # importance-map damping
+    ("beta", 0.75),           # stratification damping (0 => classic VEGAS)
+    ("nstrat", None),         # stratifications/dim (None => heuristic)
+    ("max_cubes", 1 << 18),   # cap on nstrat**d
+    ("chunk", 16_384),        # evals per scanned chunk (batch_size analog)
+    ("dtype", "float32"),
+)
 
-@dataclasses.dataclass(frozen=True)
+
+@dataclasses.dataclass(frozen=True, init=False)
 class VegasConfig:
-    """Algorithm parameters (paper Table 2 names where they exist)."""
-    neval: int = 100_000          # target integrand evaluations / iteration
-    max_it: int = 20              # max_it
-    skip: int = 0                 # iterations excluded from the final combine
-    ninc: int = 1024              # n_intervals of the importance map
-    alpha: float = 0.5            # importance-map damping
-    beta: float = 0.75            # stratification damping (0 => classic VEGAS)
-    nstrat: int | None = None     # stratifications/dim (None => heuristic)
-    max_cubes: int = 1 << 18      # cap on nstrat**d
-    chunk: int = 16_384           # evals per scanned chunk (batch_size analog)
+    """Algorithm parameters (paper Table 2 names where they exist) plus ONE
+    execution handle: ``execution`` (`repro.engine.ExecutionConfig`) carries
+    everything about HOW the run executes — backend, kernel knobs, batching,
+    sharding, checkpointing (DESIGN.md §9).
+
+    Deprecation shim: the pre-engine flat fields (``backend``, ``interpret``,
+    ``fused_cubes``, ``tile``) are still accepted as keyword arguments (with
+    a DeprecationWarning) and folded into ``execution``; reading them back
+    (``cfg.backend`` etc.) keeps working via properties.
+    """
+    neval: int = 100_000
+    max_it: int = 20
+    skip: int = 0
+    ninc: int = 1024
+    alpha: float = 0.5
+    beta: float = 0.75
+    nstrat: int | None = None
+    max_cubes: int = 1 << 18
+    chunk: int = 16_384
     dtype: str = "float32"
-    backend: str = "ref"          # 'ref' | 'pallas'
-    interpret: bool | None = None  # None => autodetect (kernels.backend_default)
-    fused_cubes: bool = True      # in-kernel RNG + cube accumulation (P-V3)
-    tile: int | None = None       # pallas tile; None => VMEM-budget autotune
+    execution: ExecutionConfig = ExecutionConfig()
+
+    def __init__(self, *args, execution: ExecutionConfig | None = None,
+                 **kwargs):
+        names = [n for n, _ in _ALGO_FIELDS]
+        if len(args) > len(names):
+            raise TypeError(f"VegasConfig takes at most {len(names)} "
+                            f"positional arguments ({len(args)} given)")
+        vals = dict(_ALGO_FIELDS)
+        positional = dict(zip(names, args))
+        vals.update(positional)
+        legacy = {}
+        for k, v in kwargs.items():
+            if k in positional:
+                raise TypeError(f"duplicate argument {k!r}")
+            if k in vals:
+                vals[k] = v
+            elif k in LEGACY_EXEC_FIELDS:
+                legacy[k] = v
+            else:
+                raise TypeError(f"unexpected argument {k!r}")
+        if legacy:
+            warnings.warn(
+                f"VegasConfig({', '.join(sorted(legacy))}) is deprecated: "
+                f"execution knobs moved to "
+                f"VegasConfig(execution=ExecutionConfig(...))",
+                DeprecationWarning, stacklevel=2)
+            execution = (execution or ExecutionConfig()).with_legacy(**legacy)
+        for k, v in vals.items():
+            object.__setattr__(self, k, v)
+        object.__setattr__(self, "execution", execution or ExecutionConfig())
+
+    # Read-side back-compat for the old flat fields.
+    @property
+    def backend(self) -> str:
+        return self.execution.backend
+
+    @property
+    def interpret(self) -> bool | None:
+        return self.execution.interpret
+
+    @property
+    def fused_cubes(self) -> bool:
+        return self.execution.backend == "pallas-fused"
+
+    @property
+    def tile(self) -> int | None:
+        return self.execution.tile
+
+    def with_execution(self, execution: ExecutionConfig) -> "VegasConfig":
+        return dataclasses.replace(self, execution=execution)
 
     def resolve(self, dim: int) -> "ResolvedConfig":
         ns = self.nstrat or strat.choose_nstrat(self.neval, dim, self.max_cubes)
@@ -107,17 +178,15 @@ def init_state(integrand: Integrand, cfg: ResolvedConfig, key) -> VegasState:
 
 def iteration_step(state: VegasState, integrand: Integrand,
                    cfg: ResolvedConfig, fill_fn=None) -> VegasState:
-    """One VEGAS+ iteration. ``fill_fn`` lets dist/sharded_fill.py substitute
-    the multi-device fill while reusing adaptation/aggregation unchanged."""
+    """One VEGAS+ iteration. ``fill_fn`` lets the engine (or a custom
+    caller) substitute the fill — e.g. the shard_mapped multi-device fill —
+    while reusing adaptation/aggregation unchanged.  The default comes from
+    the capability-declaring backend registry (`repro.engine.backends`)."""
     dtype = jnp.dtype(cfg.dtype)
     key_it = jax.random.fold_in(state.key, state.it)
     if fill_fn is None:
-        fill_fn = functools.partial(
-            fill_mod.BACKENDS[cfg.backend], nstrat=cfg.nstrat, n_cap=cfg.n_cap,
-            chunk=cfg.chunk, dtype=dtype,
-            **({"interpret": cfg.interpret, "fused_cubes": cfg.fused_cubes,
-                "tile": cfg.tile}
-               if cfg.backend == "pallas" else {}))
+        from repro.engine import backends as _backends
+        fill_fn = _backends.bind_fill(cfg)
     res = fill_fn(state.edges, state.n_h, key_it, integrand)
 
     i_it, sigma2_it, d_h = fill_mod.estimate_from_cubes(res, state.n_h)
@@ -177,51 +246,22 @@ def run(integrand: Integrand, cfg: VegasConfig | None = None, *,
         checkpoint_cb: Callable[[int, VegasState], None] | None = None) -> VegasResult:
     """Run VEGAS+ to completion (or resume from ``state``).
 
-    ``fill_fn(edges, n_h, key_it, integrand) -> FillResult`` overrides the
-    configured backend — ``dist.sharded_fill.make_sharded_fill`` builds the
-    multi-device one.  With no ``checkpoint_cb`` the whole loop executes as a
-    single jitted on-device program (``run_loop``): zero host round-trips
-    between iterations.  ``checkpoint_cb(it, state)`` switches to a host-side
-    loop that invokes the callback after every iteration (the loop's only
-    host sync; DESIGN.md §5.3) — pass ``lambda it, s: mgr.save(it, s)`` with
-    a ``dist.checkpoint.CheckpointManager`` for fault tolerance; resume by
-    passing the restored ``state`` (the results buffer grows automatically if
-    the resuming config has a larger ``max_it``).
+    Thin adapter over the execution engine: ``make_plan`` validates the
+    config's execution axes (backend/sharding/checkpoint, `repro.engine`)
+    and ``execute`` runs the plan.  With no checkpoint policy the whole loop
+    executes as a single jitted on-device program (``run_loop``): zero host
+    round-trips between iterations.
+
+    Legacy extension hooks, forwarded to the executor unchanged:
+    ``fill_fn(edges, n_h, key_it, integrand) -> FillResult`` replaces the
+    plan's fill wiring entirely (prefer ``ExecutionConfig(mesh=...)``);
+    ``checkpoint_cb(it, state)`` forces the host-side loop and is invoked
+    after every iteration (prefer ``ExecutionConfig(checkpoint=
+    CheckpointPolicy(...))``).  Resume by passing the restored ``state``
+    (the results buffer grows automatically if the resuming config has a
+    larger ``max_it``).
     """
-    cfg = (cfg or VegasConfig()).resolve(integrand.dim)
-    key = key if key is not None else jax.random.PRNGKey(0)
-    if state is None:
-        state = init_state(integrand, cfg, key)
-    # The jitted step donates its input state; work on a copy so the caller's
-    # key / checkpointed state stay alive (resume safety).
-    state = jax.tree.map(jnp.copy, state)
-    if state.results.shape[0] < cfg.max_it:
-        # Resuming under a config with more iterations: grow the buffer.
-        pad = cfg.max_it - state.results.shape[0]
-        filler = jnp.stack([jnp.zeros((pad,), state.results.dtype),
-                            jnp.full((pad,), jnp.inf, state.results.dtype)], 1)
-        state = VegasState(state.edges, state.n_h, state.key, state.it,
-                           jnp.concatenate([state.results, filler]))
-
-    start = int(state.it)
-    if checkpoint_cb is None:
-        # On-device loop: one jitted program for the whole run.
-        prog = jax.jit(functools.partial(
-            run_loop, integrand=integrand, cfg=cfg, start=start,
-            fill_fn=fill_fn), donate_argnums=0)
-        state = prog(state)
-    else:
-        step = jax.jit(functools.partial(
-            iteration_step, integrand=integrand, cfg=cfg, fill_fn=fill_fn),
-            donate_argnums=0)
-        for it in range(start, cfg.max_it):
-            state = step(state)
-            jax.block_until_ready(state.results)
-            checkpoint_cb(it, state)
-
-    mean, sdev, chi2_dof, n_used = combine_results(state.results, cfg.skip,
-                                                   int(state.it))
-    means, sig2 = state.results[:, 0], state.results[:, 1]
-    return VegasResult(float(mean), float(sdev), float(chi2_dof), int(n_used),
-                       means[: int(state.it)], jnp.sqrt(sig2[: int(state.it)]),
-                       state)
+    from repro.engine import execute, make_plan
+    plan = make_plan(integrand, cfg)
+    return execute(plan, key=key, state=state, fill_fn=fill_fn,
+                   checkpoint_cb=checkpoint_cb)

@@ -114,7 +114,7 @@ class CheckpointManager:
         files (a crash mid-retention or a torn copy must not kill the resume).
 
         Returns None when the directory holds no checkpoints at all (cold
-        start — see launch/train.py); raises FileNotFoundError when
+        start); raises FileNotFoundError when
         checkpoints exist but none is readable (data loss must be loud)."""
         cand = _candidates(self.dir)
         if not cand:

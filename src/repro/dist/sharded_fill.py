@@ -1,12 +1,13 @@
 """Sharded fill: distribute the fill phase's chunk axis over a JAX mesh.
 
-The unit of distribution is the *global chunk index* that already keys the
-fill's RNG (core/fill.py, DESIGN.md C5): chunk ``g`` draws its uniforms from
-``fold_in(key_it, g)`` and finds its hypercubes from the global eval offset
-``g * chunk``, so the numbers a shard produces are a pure function of
-``(key, g)`` — independent of which device computes them, how many devices
-exist, or in what order shards run.  Sharding is therefore just a static
-partition of ``range(n_cap // chunk)``:
+Thin adapter over the engine's sharding layer (`repro.engine.sharding`,
+DESIGN.md §5/§9): the unit of distribution is the *global chunk index* that
+already keys the fill's RNG (core/fill.py, C5) — chunk ``g`` draws its
+uniforms from ``fold_in(key_it, g)`` and finds its hypercubes from the
+global eval offset ``g * chunk``, so the numbers a shard produces are a pure
+function of ``(key, g)``: independent of which device computes them, how
+many devices exist, or in what order shards run.  Sharding is a static
+partition of ``range(n_cap // chunk)`` plus one psum:
 
   * every shard owns the same *static* number of chunks (ceil division), so
     the scanned per-shard program is identical everywhere (no divergence,
@@ -23,98 +24,23 @@ Device-count invariance (checked by tests/_dist_worker.py at rtol 2e-5: the
 tolerance covers float32 reduction-order differences only, the sampled
 streams are bit-identical) is what makes elastic restart (checkpoint.py) and
 straggler re-dispatch (:func:`recompute_shard`, DESIGN.md D3/§5) safe.
+
+Prefer expressing sharding through the plan layer
+(``ExecutionConfig(mesh=..., shard_axes=...)``); :func:`make_sharded_fill`
+remains the drop-in ``fill_fn`` hook for callers that wire the loop by hand.
 """
 
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-try:  # jax >= 0.6: shard_map graduated out of experimental
-    from jax import shard_map as _shard_map
-except ImportError:  # jax <= 0.5.x
-    from jax.experimental.shard_map import shard_map as _shard_map
+from repro.engine import backends as backends_mod
+from repro.engine.sharding import (  # noqa: F401  (re-exported API)
+    make_local_fill,
+    make_sharded_fill,
+    mesh_shard_count,
+    shard_chunk_range,
+)
 
 from repro.core import fill as fill_mod
-
-
-def mesh_shard_count(mesh, axis_names) -> int:
-    """Number of fill shards = product of the mesh extents being sharded over."""
-    n = 1
-    for a in axis_names:
-        n *= mesh.shape[a]
-    return n
-
-
-def shard_chunk_range(total_chunks: int, shard: int, n_shards: int):
-    """Contiguous chunk range ``[start, start + count)`` owned by ``shard``.
-
-    Every shard gets the same static ``count`` (ceil division) so all devices
-    compile and run the identical scanned program; shards whose range extends
-    past ``total_chunks`` simply accumulate zeros there (overflow-bucket
-    masking, DESIGN.md C2).  Ranges partition ``[0, n_shards * count)`` and
-    are disjoint, so summing every shard's partial reproduces the global fill.
-    """
-    count = -(-total_chunks // n_shards)
-    return shard * count, count
-
-
-def _shard_fill_callable(resolved_cfg, backend: str | None):
-    """The per-shard fill with everything bound except the chunk range.
-
-    ``backend=None`` follows the config's own backend.  Both backends share
-    the chunk-keyed RNG contract (bit-identical streams) and accept
-    ``start_chunk``/``n_chunks`` + ``kahan``, so sharding is backend-blind;
-    the pallas path additionally gets its kernel knobs from the config
-    (interpret autodetect, P-V3 fusion, tile autotune).
-    """
-    rc = resolved_cfg
-    backend = rc.backend if backend is None else backend
-    kw = dict(nstrat=rc.nstrat, n_cap=rc.n_cap, chunk=rc.chunk,
-              dtype=jnp.dtype(rc.dtype), kahan=True)
-    if backend == "pallas":
-        kw.update(interpret=rc.interpret, fused_cubes=rc.fused_cubes,
-                  tile=rc.tile)
-    return functools.partial(fill_mod.BACKENDS[backend], **kw)
-
-
-def make_sharded_fill(mesh, axis_names, resolved_cfg, backend: str | None = None):
-    """Build a drop-in ``fill_fn`` for ``core.integrator.iteration_step``.
-
-    ``fill_fn(edges, n_h, key, integrand)`` shard_maps the configured fill
-    backend (``'ref'`` or ``'pallas'``; default: the config's own) over the
-    mesh axes named in ``axis_names`` (1D or 2D meshes: shards are enumerated
-    in row-major order over the named axes) and psum-reduces the per-shard
-    :class:`FillResult` partials, returning the same replicated result on
-    every device.  Works eagerly and under jit (``run`` jits the whole
-    iteration around it, so adaptation stays on-device, C4/C6).
-    """
-    rc = resolved_cfg
-    axis_names = tuple(axis_names)
-    n_shards = mesh_shard_count(mesh, axis_names)
-    total_chunks = rc.n_cap // rc.chunk
-    _, per_shard = shard_chunk_range(total_chunks, 0, n_shards)
-    shard_fill = _shard_fill_callable(rc, backend)
-
-    def fill_fn(edges, n_h, key, integrand):
-        def body(edges, n_h, key):
-            idx = jnp.zeros((), jnp.int32)
-            for a in axis_names:  # row-major linear shard index
-                idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
-            part = shard_fill(edges, n_h, key, integrand,
-                              start_chunk=idx * per_shard, n_chunks=per_shard)
-            return jax.tree.map(lambda x: jax.lax.psum(x, axis_names), part)
-
-        # check_rep=False: pallas_call has no replication rule under
-        # shard_map; the psum above already replicates the result explicitly.
-        sharded = _shard_map(body, mesh=mesh, in_specs=(P(), P(), P()),
-                             out_specs=P(), check_rep=False)
-        return sharded(edges, n_h, key)
-
-    return fill_fn
 
 
 def recompute_shard(edges, n_h, key, integrand, resolved_cfg, shard: int,
@@ -124,11 +50,11 @@ def recompute_shard(edges, n_h, key, integrand, resolved_cfg, shard: int,
     The straggler / failure re-dispatch hook (DESIGN.md D3/§5): because the
     RNG is keyed by global chunk id, any host can recompute shard ``shard``
     of an ``n_shards``-way fill and get bit-identical samples to what the
-    straggling device would have produced — with either backend, since the
-    streams are shared bit-for-bit.  Summing all shards' partials equals the
-    unsharded fill (checked by tests/_dist_worker.py check 5).
+    straggling device would have produced — with any registered backend,
+    since the streams are shared bit-for-bit.  Summing all shards' partials
+    equals the unsharded fill (checked by tests/_dist_worker.py check 5).
     """
     rc = resolved_cfg
     start, count = shard_chunk_range(rc.n_cap // rc.chunk, shard, n_shards)
-    return _shard_fill_callable(rc, backend)(
-        edges, n_h, key, integrand, start_chunk=start, n_chunks=count)
+    fill = backends_mod.bind_fill(rc, backend=backend, kahan=True)
+    return fill(edges, n_h, key, integrand, start_chunk=start, n_chunks=count)

@@ -1,0 +1,58 @@
+"""repro.engine: the unified execution-plan layer (DESIGN.md §9).
+
+One pipeline — ``Plan -> Executor -> Result`` — composes the four orthogonal
+execution axes every run path shares:
+
+  backend × batching × sharding × checkpointing
+
+`make_plan` validates a (workload, VegasConfig, ExecutionConfig) combination
+against the capability-declaring backend registry (`engine.backends`) and
+fails fast with a `PlanError` for unsupported combinations; `execute` runs
+the validated plan as one jitted program per run.  `core.run`,
+`batch.run_batch`, and `dist.make_sharded_fill` are thin adapters over this
+package.
+
+Import structure note: `config` and `backends` load eagerly (they are
+dependencies of `core.integrator`'s config shim and of `iteration_step`'s
+default fill); `plan`/`executor`/`sharding` load lazily on first attribute
+access because they import `core.integrator` back.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from .backends import (  # noqa: F401
+    CAPABILITIES,
+    BackendSpec,
+    available,
+    bind_fill,
+    capability_matrix,
+    register,
+)
+from .backends import get as get_backend  # noqa: F401
+from .config import BATCH_MODES, CheckpointPolicy, ExecutionConfig  # noqa: F401
+
+_LAZY = {
+    "Plan": "plan", "PlanError": "plan", "make_plan": "plan",
+    "execute": "executor",
+    "make_sharded_fill": "sharding", "make_local_fill": "sharding",
+    "shard_chunk_range": "sharding", "mesh_shard_count": "sharding",
+    "replicated_shard_map": "sharding",
+    "plan": "plan", "executor": "executor", "sharding": "sharding",
+}
+
+__all__ = [
+    "BATCH_MODES", "BackendSpec", "CAPABILITIES", "CheckpointPolicy",
+    "ExecutionConfig", "Plan", "PlanError", "available", "bind_fill",
+    "capability_matrix", "execute", "get_backend", "make_plan",
+    "make_sharded_fill", "register",
+]
+
+
+def __getattr__(name):
+    modname = _LAZY.get(name)
+    if modname is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    mod = importlib.import_module(f".{modname}", __name__)
+    return mod if name == modname else getattr(mod, name)

@@ -1,0 +1,146 @@
+"""Capability-declaring fill-backend registry.
+
+Every fill implementation registers a :class:`BackendSpec` here: the callable
+(one shared contract, ``fill(edges, n_h, key, integrand, *, nstrat, n_cap,
+chunk, dtype, start_chunk, n_chunks, kahan, **knobs) -> FillResult``), the
+**capabilities** it declares, the ExecutionConfig **knobs** it accepts, and
+the accumulation dtypes it supports.  Plan validation
+(`engine.plan.make_plan`) reads the declarations and rejects unsupported
+backend × axis combinations loudly at plan time — instead of the historical
+failure mode, an opaque tracer error from deep inside `shard_map`/`vmap`.
+
+Capabilities (DESIGN.md §9 capability matrix):
+
+  * ``shardable``        — honors ``start_chunk``/``n_chunks`` + ``kahan``
+                           under ``shard_map`` (the C5 chunk contract);
+  * ``vmappable``        — traces correctly under ``jax.vmap`` over an
+                           `IntegrandFamily`'s parameter axis;
+  * ``in-kernel-rng``    — regenerates its uniforms inside the kernel
+                           (no per-eval RNG traffic when compiled, P-V3);
+  * ``closure-hoisting`` — accepts integrands that close over arrays
+                           (ridge's peak table, vmapped family params).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Mapping
+
+from repro.core import fill as fill_mod
+
+SHARDABLE = "shardable"
+VMAPPABLE = "vmappable"
+IN_KERNEL_RNG = "in-kernel-rng"
+CLOSURE_HOISTING = "closure-hoisting"
+
+CAPABILITIES = (SHARDABLE, VMAPPABLE, IN_KERNEL_RNG, CLOSURE_HOISTING)
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """One registered fill implementation + its declared envelope."""
+    name: str
+    fill: Callable[..., Any]
+    capabilities: frozenset
+    knobs: tuple[str, ...] = ()       # ExecutionConfig fields forwarded as kwargs
+    fixed: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    dtypes: tuple[str, ...] = ("float32",)
+    doc: str = ""
+
+    def supports(self, capability: str) -> bool:
+        return capability in self.capabilities
+
+
+_REGISTRY: dict[str, BackendSpec] = {}
+
+
+def register(spec: BackendSpec, *, overwrite: bool = False) -> BackendSpec:
+    if spec.name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {spec.name!r} already registered")
+    bad = set(spec.capabilities) - set(CAPABILITIES)
+    if bad:
+        raise ValueError(f"unknown capabilities {sorted(bad)}; "
+                         f"known: {CAPABILITIES}")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def available() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str) -> BackendSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown fill backend {name!r}; registered: {available()}"
+        ) from None
+
+
+def bind_fill(rcfg, *, backend: str | None = None, **overrides) -> Callable:
+    """Bind a registered backend to a resolved config.
+
+    Returns ``fill(edges, n_h, key, integrand, **runtime)`` with the
+    geometry (``nstrat``/``n_cap``/``chunk``/``dtype``), the spec's pinned
+    kwargs, and the backend's declared ExecutionConfig knobs already applied.
+    ``overrides`` (e.g. ``kahan=True`` for sharded partials) win last.
+    This is the single replacement for the old ``fill_mod.BACKENDS`` dict +
+    the per-call-site kwargs threading.
+    """
+    import jax.numpy as jnp
+
+    spec = get(backend if backend is not None else rcfg.execution.backend)
+    kw = dict(nstrat=rcfg.nstrat, n_cap=rcfg.n_cap, chunk=rcfg.chunk,
+              dtype=jnp.dtype(rcfg.dtype))
+    kw.update(spec.fixed)
+    for knob in spec.knobs:
+        kw[knob] = getattr(rcfg.execution, knob)
+    kw.update(overrides)
+    return functools.partial(spec.fill, **kw)
+
+
+def capability_matrix() -> str:
+    """Human-readable capability table (the `--plan` CLI output and
+    DESIGN.md §9 render this)."""
+    lines = ["backend          " + "  ".join(f"{c:<16}" for c in CAPABILITIES)]
+    for name in available():
+        spec = _REGISTRY[name]
+        row = "  ".join(f"{'yes' if spec.supports(c) else '-':<16}"
+                       for c in CAPABILITIES)
+        lines.append(f"{name:<17}{row}")
+    return "\n".join(lines)
+
+
+# --- the built-in backends ---------------------------------------------------
+
+register(BackendSpec(
+    name="ref",
+    fill=fill_mod.fill_reference,
+    capabilities=frozenset({SHARDABLE, VMAPPABLE, CLOSURE_HOISTING}),
+    knobs=(),
+    dtypes=("float32", "float64"),
+    doc="pure-jnp oracle: scatter-add accumulation, chunked lax.scan",
+))
+
+register(BackendSpec(
+    name="pallas",
+    fill=fill_mod.fill_pallas,
+    capabilities=frozenset({SHARDABLE, VMAPPABLE, CLOSURE_HOISTING}),
+    knobs=("interpret", "tile"),
+    fixed={"fused_cubes": False},
+    dtypes=("float32",),
+    doc="P-V2 baseline kernel: uniforms in / weights out, XLA segment-sum",
+))
+
+register(BackendSpec(
+    name="pallas-fused",
+    fill=fill_mod.fill_pallas,
+    capabilities=frozenset({SHARDABLE, VMAPPABLE, IN_KERNEL_RNG,
+                            CLOSURE_HOISTING}),
+    knobs=("interpret", "tile"),
+    fixed={"fused_cubes": True},
+    dtypes=("float32",),
+    doc="P-V3 streaming kernel: in-kernel RNG + in-kernel cube moments",
+))

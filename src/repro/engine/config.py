@@ -1,0 +1,124 @@
+"""Execution configuration: HOW a VEGAS+ run executes, split from WHAT it
+computes.
+
+`core.integrator.VegasConfig` carries the algorithm parameters (neval, ninc,
+alpha, beta, ... — the paper's Table 2 names); :class:`ExecutionConfig`
+carries the four orthogonal execution axes the engine composes
+(DESIGN.md §9):
+
+  * **backend**  — which fill implementation (`engine.backends` registry:
+                   ``ref`` / ``pallas`` / ``pallas-fused``) plus its knobs
+                   (``interpret``, ``tile``);
+  * **batching** — how an `IntegrandFamily` workload executes (``vmap`` over
+                   the scenario axis vs a ``serial`` per-scenario loop);
+  * **sharding** — a device mesh + axis names to shard the fill's global
+                   chunk axis over (`engine.sharding`);
+  * **checkpointing** — a :class:`CheckpointPolicy` that switches the run to
+                   the host-side loop and persists `VegasState` every
+                   iteration (`dist.checkpoint`).
+
+The split exists so that every run path — single scenario, batched family,
+sharded fill, and their combinations — consumes ONE config object instead of
+re-threading backend flags by hand (the config sprawl this replaces).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+#: Legacy flat `VegasConfig` fields that now live on ExecutionConfig.
+LEGACY_EXEC_FIELDS = ("backend", "interpret", "fused_cubes", "tile")
+
+#: Valid values of ExecutionConfig.batch.
+BATCH_MODES = ("auto", "vmap", "serial")
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    """When and where to persist `VegasState` during a run.
+
+    Any policy forces the host-side iteration loop (checkpointing is
+    inherently a host sync, DESIGN.md §5.3).  Either give a ``directory``
+    (a `dist.checkpoint.CheckpointManager` is built with ``keep`` retention)
+    or a ``callback(it, state)`` of your own; ``every`` throttles how often
+    the save fires (the host loop still runs every iteration).
+    """
+    directory: str | None = None
+    keep: int = 3
+    every: int = 1
+    callback: Callable[[int, Any], None] | None = None
+
+    def build_callback(self) -> Callable[[int, Any], None]:
+        base = self.callback
+        if base is None:
+            if self.directory is None:
+                raise ValueError(
+                    "CheckpointPolicy needs a directory or a callback")
+            from repro.dist.checkpoint import CheckpointManager
+            mgr = CheckpointManager(self.directory, keep=self.keep)
+            base = lambda it, state: mgr.save(it, state)
+        if self.every <= 1:
+            return base
+        every = self.every
+
+        def throttled(it, state):
+            if (it + 1) % every == 0:
+                base(it, state)
+        return throttled
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionConfig:
+    """The four execution axes, as data.  Validation happens at plan time
+    (`engine.plan.make_plan`), not here — so configs stay cheap to build and
+    the error surfaces exactly once, with the full workload context."""
+    backend: str = "ref"            # engine.backends registry name
+    interpret: bool | None = None   # pallas mode; None = platform autodetect
+    tile: int | None = None         # pallas tile; None = VMEM autotune
+    batch: str = "auto"             # family execution: auto | vmap | serial
+    mesh: Any = None                # jax Mesh; None = unsharded
+    shard_axes: tuple[str, ...] | None = None  # mesh axes to shard fill over
+    checkpoint: CheckpointPolicy | None = None
+
+    def with_legacy(self, **flat) -> "ExecutionConfig":
+        """Fold the pre-engine flat `VegasConfig` fields (``backend``,
+        ``interpret``, ``fused_cubes``, ``tile``) into this config — the
+        deprecation shim `VegasConfig.__init__` applies.
+
+        Legacy ``backend='pallas'`` meant the *fused* kernel unless
+        ``fused_cubes=False`` was also passed; the registry names the two
+        paths explicitly (``pallas-fused`` vs ``pallas``).
+        """
+        unknown = set(flat) - set(LEGACY_EXEC_FIELDS)
+        if unknown:
+            raise TypeError(f"unknown execution fields: {sorted(unknown)}")
+        backend = flat.get("backend", self.backend)
+        # The remap applies only when a legacy backend/fused_cubes kwarg was
+        # actually given — an explicitly chosen registry name (e.g.
+        # ExecutionConfig(backend='pallas') for P-V2) must never be upgraded
+        # just because some other legacy kwarg (interpret/tile) rode along.
+        if "backend" in flat or "fused_cubes" in flat:
+            default_fused = ("backend" in flat
+                             or self.backend == "pallas-fused")
+            fused = flat.get("fused_cubes", default_fused)
+            if backend in ("pallas", "pallas-fused"):
+                backend = "pallas-fused" if fused else "pallas"
+        kw = {k: flat[k] for k in ("interpret", "tile") if k in flat}
+        return dataclasses.replace(self, backend=backend, **kw)
+
+    def describe(self) -> str:
+        bits = [f"backend={self.backend}"]
+        if self.interpret is not None:
+            bits.append(f"interpret={self.interpret}")
+        if self.tile is not None:
+            bits.append(f"tile={self.tile}")
+        if self.batch != "auto":
+            bits.append(f"batch={self.batch}")
+        if self.mesh is not None:
+            axes = self.shard_axes or tuple(self.mesh.axis_names)
+            shape = "x".join(str(self.mesh.shape[a]) for a in axes)
+            bits.append(f"shard={shape}@{','.join(axes)}")
+        if self.checkpoint is not None:
+            bits.append("checkpoint=on")
+        return " ".join(bits)

@@ -1,0 +1,195 @@
+"""Executor: run a validated :class:`~repro.engine.plan.Plan`.
+
+One entry point, :func:`execute`, composes the four plan axes into a single
+program per run:
+
+  * **single scenario** — `core.run_loop` as one jitted ``fori_loop``
+    program (or the host loop when a checkpoint policy is set);
+  * **batched family**  — the whole loop ``vmap``ped over the scenario axis
+    (`repro.batch` semantics: scenario ``b`` streams from ``fold_in(key,
+    b)``, so batched == serial stream-for-stream);
+  * **sharded**         — the fill's chunk axis divided over the mesh.  For
+    single runs the fill call is shard_mapped; for batched runs the ENTIRE
+    vmapped program runs inside one ``shard_map`` with the per-shard fill +
+    psum inline — B integrands × D devices as ONE jitted XLA program, the
+    combination the pre-engine run paths could not express;
+  * **checkpointing**   — the policy's callback after every iteration on the
+    host-loop path, composing with sharding (mesh-free payload, §5).
+
+`core.run` and `batch.run_batch` are thin adapters over this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.batch.engine import BatchResult, scenario_keys
+from repro.core import integrator as core
+from repro.core import map as vmap_
+
+from . import backends as backends_mod
+from . import sharding as sharding_mod
+from .plan import Plan
+
+
+def execute(plan: Plan, *, key=None, state: core.VegasState | None = None,
+            cache=None, fill_fn=None, checkpoint_cb=None):
+    """Run a plan.
+
+    ``key`` defaults to ``PRNGKey(0)``.  ``state`` resumes a single-scenario
+    run from a checkpoint; ``cache`` warm-starts a family run's importance
+    maps (`batch.cache.MapCache`).  ``fill_fn`` overrides the plan's entire
+    backend/sharding wiring with a custom ``fill_fn(edges, n_h, key,
+    integrand)`` — the legacy `core.run` extension hook `repro.dist` built
+    on; prefer expressing sharding through the plan.  ``checkpoint_cb``
+    overrides the plan's checkpoint policy callback.
+
+    Returns `VegasResult` (single scenario), `BatchResult` (vmapped family),
+    or ``list[VegasResult]`` (``batch='serial'`` family).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if plan.is_family:
+        if state is not None:
+            raise ValueError("state resume is a single-scenario feature; "
+                             "family runs restart from the map cache instead")
+        if fill_fn is not None or checkpoint_cb is not None:
+            raise ValueError(
+                "fill_fn/checkpoint_cb are single-scenario hooks; express "
+                "sharding and checkpointing for family runs through "
+                "ExecutionConfig (mesh=..., checkpoint=...)")
+        if plan.batched:
+            return _execute_family_vmap(plan, key, cache)
+        if cache is not None:
+            raise ValueError("the warm-start cache applies to the vmapped "
+                             "batch program; this plan resolved to "
+                             "batch='serial'")
+        return _execute_family_serial(plan, key)
+    if cache is not None:
+        raise ValueError("the warm-start cache is a family feature; "
+                         "single-scenario runs resume from state instead")
+    return _execute_single(plan, key, state, fill_fn, checkpoint_cb)
+
+
+# --- single scenario ---------------------------------------------------------
+
+def _plan_fill_fn(plan: Plan, *, local: bool = False):
+    """The plan's fill: registry-bound, shard_mapped when the plan shards.
+    ``local=True`` returns the inside-shard_map form (batched program)."""
+    if plan.n_shards > 1:
+        if local:
+            return sharding_mod.make_local_fill(
+                plan.cfg, plan.mesh, plan.shard_axes,
+                backend=plan.backend.name)
+        return sharding_mod.make_sharded_fill(
+            plan.mesh, plan.shard_axes, plan.cfg, backend=plan.backend.name)
+    return backends_mod.bind_fill(plan.cfg, backend=plan.backend.name)
+
+
+def _execute_single(plan: Plan, key, state, fill_fn, checkpoint_cb):
+    cfg, integrand = plan.cfg, plan.workload
+    if fill_fn is None:
+        fill_fn = _plan_fill_fn(plan)
+    if checkpoint_cb is None and plan.checkpoint is not None:
+        checkpoint_cb = plan.checkpoint.build_callback()
+
+    if state is None:
+        state = core.init_state(integrand, cfg, key)
+    # The jitted step donates its input state; work on a copy so the caller's
+    # key / checkpointed state stay alive (resume safety).
+    state = jax.tree.map(jnp.copy, state)
+    if state.results.shape[0] < cfg.max_it:
+        # Resuming under a config with more iterations: grow the buffer.
+        pad = cfg.max_it - state.results.shape[0]
+        filler = jnp.stack([jnp.zeros((pad,), state.results.dtype),
+                            jnp.full((pad,), jnp.inf, state.results.dtype)], 1)
+        state = core.VegasState(state.edges, state.n_h, state.key, state.it,
+                                jnp.concatenate([state.results, filler]))
+
+    start = int(state.it)
+    if checkpoint_cb is None:
+        # On-device loop: one jitted program for the whole run.
+        prog = jax.jit(functools.partial(
+            core.run_loop, integrand=integrand, cfg=cfg, start=start,
+            fill_fn=fill_fn), donate_argnums=0)
+        state = prog(state)
+    else:
+        step = jax.jit(functools.partial(
+            core.iteration_step, integrand=integrand, cfg=cfg,
+            fill_fn=fill_fn), donate_argnums=0)
+        for it in range(start, cfg.max_it):
+            state = step(state)
+            jax.block_until_ready(state.results)
+            checkpoint_cb(it, state)
+
+    mean, sdev, chi2_dof, n_used = core.combine_results(
+        state.results, cfg.skip, int(state.it))
+    means, sig2 = state.results[:, 0], state.results[:, 1]
+    return core.VegasResult(float(mean), float(sdev), float(chi2_dof),
+                            int(n_used), means[: int(state.it)],
+                            jnp.sqrt(sig2[: int(state.it)]), state)
+
+
+# --- batched family ----------------------------------------------------------
+
+def _execute_family_vmap(plan: Plan, key, cache):
+    family, cfg = plan.workload, plan.cfg
+    b = plan.batch_size
+
+    edges0 = cache.get(family, cfg) if cache is not None else None
+    warm = edges0 is not None
+    if edges0 is None:
+        uni = vmap_.uniform_edges(family.lower, family.upper, cfg.ninc,
+                                  jnp.dtype(cfg.dtype))
+        edges0 = jnp.broadcast_to(uni, (b,) + uni.shape)
+
+    fill_fn = _plan_fill_fn(plan, local=True)
+
+    def one(params, key_b, edges0_b):
+        ig = family.bind(params)
+        st = core.init_state(ig, cfg, key_b)
+        st = core.VegasState(edges0_b, st.n_h, st.key, st.it, st.results)
+        st = core.run_loop(st, ig, cfg, 0, fill_fn=fill_fn)
+        mean, sdev, chi2_dof, n_used = core.combine_results(
+            st.results, cfg.skip, cfg.max_it)
+        return st, mean, sdev, chi2_dof, n_used
+
+    batched = jax.vmap(one)
+    if plan.n_shards > 1:
+        # ONE shard_map around the ENTIRE vmapped run: the per-shard fill +
+        # psum runs inside the scenario vmap, every device carries the full
+        # replicated O(B·KB) adaptation state, and the fill's chunk axis is
+        # divided per scenario.  B integrands × D devices, one XLA program.
+        batched = sharding_mod.replicated_shard_map(batched, plan.mesh, 3)
+    prog = jax.jit(batched)
+    states, mean, sdev, chi2_dof, n_used = prog(
+        family.params, scenario_keys(key, b), edges0)
+
+    if cache is not None:
+        cache.put(family, cfg, states.edges)
+
+    sig2 = np.asarray(states.results[:, :, 1])
+    return BatchResult(np.asarray(mean), np.asarray(sdev),
+                       np.asarray(chi2_dof), np.asarray(n_used),
+                       np.asarray(states.results[:, :, 0]), np.sqrt(sig2),
+                       states, warm_started=warm)
+
+
+def _execute_family_serial(plan: Plan, key):
+    """The B scenarios as B independent single-scenario executions (the
+    baseline the vmapped program is measured against; same per-scenario
+    keys, so the streams match the batched run exactly)."""
+    family = plan.workload
+    out = []
+    for b in range(family.batch_size):
+        single = dataclasses.replace(plan, workload=family.instance(b),
+                                     is_family=False, batched=False,
+                                     batch_size=1)
+        out.append(_execute_single(single, jax.random.fold_in(key, b),
+                                   None, None, None))
+    return out

@@ -1,0 +1,174 @@
+"""Plan layer: validate one (workload, config) combination before tracing.
+
+``make_plan`` turns a workload (`Integrand` or `IntegrandFamily`), a
+`VegasConfig`, and an `ExecutionConfig` into an immutable :class:`Plan` —
+the executor's sole input.  Every cross-axis constraint is checked HERE,
+against the backend registry's declared capabilities, so an unsupported
+combination fails with a one-line :class:`PlanError` naming the axis and the
+fix — never with a tracer error from deep inside ``vmap``/``shard_map``/
+Pallas lowering (DESIGN.md §9 validation rules).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.batch.family import IntegrandFamily
+from repro.core import integrator as core
+
+from . import backends as backends_mod
+from . import sharding as sharding_mod
+from .config import BATCH_MODES, CheckpointPolicy, ExecutionConfig
+
+
+class PlanError(ValueError):
+    """An invalid execution-plan combination, rejected at plan time."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A validated, fully-resolved execution plan (what `execute` runs)."""
+    workload: Any                       # Integrand | IntegrandFamily
+    cfg: core.ResolvedConfig            # algorithm parameters, resolved
+    execution: ExecutionConfig
+    backend: backends_mod.BackendSpec
+    is_family: bool                     # workload has a scenario axis
+    batched: bool                       # True => vmapped family program
+    batch_size: int                     # scenarios (1 for a single Integrand)
+    mesh: Any                           # None when unsharded
+    shard_axes: tuple[str, ...]
+    n_shards: int
+    checkpoint: CheckpointPolicy | None
+
+    def describe(self) -> str:
+        w = self.workload
+        lines = [
+            f"plan: {getattr(w, 'name', type(w).__name__)} "
+            f"(dim={self.cfg.dim}, neval={self.cfg.neval}, "
+            f"max_it={self.cfg.max_it})",
+            f"  backend    {self.backend.name} "
+            f"[{', '.join(sorted(self.backend.capabilities))}]",
+            f"  batching   {'vmap B=' + str(self.batch_size) if self.batched else ('serial B=' + str(self.batch_size) if self.batch_size > 1 else 'single scenario')}",
+            f"  sharding   {str(self.n_shards) + ' shards @ ' + ','.join(self.shard_axes) if self.n_shards > 1 else 'none'}",
+            f"  loop       {'host (checkpointing)' if self.checkpoint else 'on-device fori_loop'}",
+        ]
+        return "\n".join(lines)
+
+
+def make_plan(workload, cfg: core.VegasConfig | None = None,
+              execution: ExecutionConfig | None = None) -> Plan:
+    """Resolve + validate one run.  ``execution=None`` takes the config's own
+    ``cfg.execution``; passing both lets callers keep one algorithm config
+    and vary the execution axes (the sweep CLI does this)."""
+    cfg = cfg or core.VegasConfig()
+    if execution is None:
+        execution = cfg.execution
+    elif execution is not cfg.execution:
+        cfg = cfg.with_execution(execution)
+    rcfg = cfg.resolve(workload.dim)
+
+    # --- backend axis -------------------------------------------------------
+    try:
+        spec = backends_mod.get(execution.backend)
+    except KeyError as e:
+        raise PlanError(str(e)) from None
+    # Normalize any jnp.dtype()-accepted spelling before comparing against
+    # the spec's declared names ('f4', np.float64, jnp.float32, ... all ok).
+    dtype_name = jnp.dtype(rcfg.dtype).name
+    if dtype_name not in spec.dtypes:
+        raise PlanError(
+            f"backend {spec.name!r} supports dtypes {spec.dtypes}, got "
+            f"dtype={dtype_name!r}"
+            + (" (the in-kernel RNG reproduces the f32 uniform bit pattern)"
+               if spec.supports(backends_mod.IN_KERNEL_RNG) else ""))
+    # The knob universe comes from the registry itself, so a knob added to
+    # one BackendSpec is automatically validated against every other.
+    all_knobs = set().union(*(backends_mod.get(n).knobs
+                              for n in backends_mod.available()))
+    for knob in sorted(all_knobs):
+        if (getattr(execution, knob, None) is not None
+                and knob not in spec.knobs):
+            raise PlanError(
+                f"{knob}={getattr(execution, knob)!r} is not a knob of "
+                f"backend {spec.name!r} (accepted: {spec.knobs or 'none'})")
+
+    # --- batch axis ---------------------------------------------------------
+    is_family = isinstance(workload, IntegrandFamily) or (
+        hasattr(workload, "params") and hasattr(workload, "bind"))
+    if execution.batch not in BATCH_MODES:
+        raise PlanError(f"batch={execution.batch!r} is not one of {BATCH_MODES}")
+    if not is_family:
+        if execution.batch == "vmap":
+            raise PlanError(
+                f"batch='vmap' needs an IntegrandFamily workload with a "
+                f"scenario axis; got a plain integrand "
+                f"{getattr(workload, 'name', workload)!r}")
+        batched, batch_size = False, 1
+    else:
+        batch_size = workload.batch_size
+        if execution.batch == "serial":
+            batched = False
+        else:
+            if not spec.supports(backends_mod.VMAPPABLE):
+                if execution.batch == "vmap":
+                    raise PlanError(
+                        f"backend {spec.name!r} does not declare "
+                        f"'{backends_mod.VMAPPABLE}'; use batch='serial' or a "
+                        f"vmappable backend ({_caps(backends_mod.VMAPPABLE)})")
+                batched = False   # auto: fall back to the serial loop
+            else:
+                batched = True
+
+    # --- sharding axis ------------------------------------------------------
+    mesh, shard_axes, n_shards = execution.mesh, execution.shard_axes, 1
+    if shard_axes and mesh is None:
+        raise PlanError(f"shard_axes={shard_axes} given without a mesh")
+    if mesh is not None:
+        shard_axes = tuple(shard_axes or mesh.axis_names)
+        missing = [a for a in shard_axes if a not in mesh.axis_names]
+        if missing:
+            raise PlanError(
+                f"shard axes {missing} not in mesh axes "
+                f"{tuple(mesh.axis_names)}")
+        n_shards = sharding_mod.mesh_shard_count(mesh, shard_axes)
+        if n_shards > 1 and not spec.supports(backends_mod.SHARDABLE):
+            raise PlanError(
+                f"backend {spec.name!r} does not declare "
+                f"'{backends_mod.SHARDABLE}'; shardable backends: "
+                f"{_caps(backends_mod.SHARDABLE)}")
+        if n_shards > rcfg.n_cap // rcfg.chunk:
+            # Merely-uneven divisions are fine (trailing shards accumulate
+            # masked zeros, DESIGN.md C2); rejected is only the degenerate
+            # case where shards outnumber chunks, i.e. devices cannot own
+            # work even at one chunk apiece.
+            raise PlanError(
+                f"{n_shards} shards but only {rcfg.n_cap // rcfg.chunk} "
+                f"chunks: more devices than units of work — lower the "
+                f"device count or the chunk size ({rcfg.chunk})")
+    else:
+        shard_axes = ()
+
+    # --- checkpoint axis ----------------------------------------------------
+    ckpt = execution.checkpoint
+    if ckpt is not None:
+        if is_family:
+            raise PlanError(
+                "checkpointing is a single-scenario, host-loop policy; a "
+                "family run restarts from the warm-start map cache "
+                "(batch.cache.MapCache) instead")
+        if ckpt.directory is None and ckpt.callback is None:
+            raise PlanError(
+                "CheckpointPolicy needs a directory or a callback")
+
+    return Plan(workload=workload, cfg=rcfg, execution=execution,
+                backend=spec, is_family=is_family, batched=batched,
+                batch_size=batch_size, mesh=mesh, shard_axes=shard_axes,
+                n_shards=n_shards, checkpoint=ckpt)
+
+
+def _caps(capability: str) -> list[str]:
+    return [n for n in backends_mod.available()
+            if backends_mod.get(n).supports(capability)]

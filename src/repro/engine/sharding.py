@@ -1,0 +1,120 @@
+"""Sharding mechanics: partition the fill's global chunk axis over a mesh.
+
+The distribution contract is DESIGN.md C5: chunk ``g`` draws its samples from
+``fold_in(key_it, g)`` and finds its cubes from the global offset
+``g * chunk``, so a shard's numbers are a pure function of ``(key, chunk
+range)`` — independent of device identity, count, or order.  Sharding is a
+static partition of ``range(n_cap // chunk)`` plus one psum.
+
+Two composition shapes, both built on :func:`make_local_fill`:
+
+  * :func:`make_sharded_fill` wraps ONE fill call in its own ``shard_map`` —
+    a drop-in ``fill_fn`` for `core.integrator.iteration_step` (what
+    `repro.dist` re-exports, and what the host-loop/checkpoint path uses);
+  * the executor's sharded **batched** program instead wraps the ENTIRE
+    vmapped run in one ``shard_map`` and calls the local fill inside it —
+    B scenarios × D devices as one jitted program (DESIGN.md §9.3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+try:  # jax >= 0.6: shard_map graduated out of experimental
+    from jax import shard_map as shard_map
+except ImportError:  # jax <= 0.5.x
+    from jax.experimental.shard_map import shard_map
+
+from . import backends as backends_mod
+
+REPLICATED = P()
+
+
+def mesh_shard_count(mesh, axis_names) -> int:
+    """Number of fill shards = product of the mesh extents being sharded over."""
+    n = 1
+    for a in axis_names:
+        n *= mesh.shape[a]
+    return n
+
+
+def shard_chunk_range(total_chunks: int, shard: int, n_shards: int):
+    """Contiguous chunk range ``[start, start + count)`` owned by ``shard``.
+
+    Every shard gets the same static ``count`` (ceil division) so all devices
+    compile and run the identical scanned program; shards whose range extends
+    past ``total_chunks`` simply accumulate zeros there (overflow-bucket
+    masking, DESIGN.md C2).  Ranges partition ``[0, n_shards * count)`` and
+    are disjoint, so summing every shard's partial reproduces the global fill.
+    """
+    count = -(-total_chunks // n_shards)
+    return shard * count, count
+
+
+def linear_shard_index(mesh, axis_names):
+    """Row-major linear shard index over the named mesh axes.  Only valid
+    inside a ``shard_map`` body over those axes."""
+    idx = jnp.zeros((), jnp.int32)
+    for a in axis_names:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def make_local_fill(rcfg, mesh, axis_names, *, backend: str | None = None):
+    """The per-shard fill + psum, for use INSIDE a ``shard_map`` body.
+
+    ``fill(edges, n_h, key, integrand)`` computes this shard's chunk range
+    with the registered backend (Kahan-compensated so partials are exact to
+    ~1 ulp, DESIGN.md D4) and psum-reduces over ``axis_names`` — every
+    device returns the identical replicated :class:`FillResult`.
+    """
+    axis_names = tuple(axis_names)
+    n_shards = mesh_shard_count(mesh, axis_names)
+    total_chunks = rcfg.n_cap // rcfg.chunk
+    _, per_shard = shard_chunk_range(total_chunks, 0, n_shards)
+    shard_fill = backends_mod.bind_fill(rcfg, backend=backend, kahan=True)
+
+    def fill(edges, n_h, key, integrand):
+        idx = linear_shard_index(mesh, axis_names)
+        part = shard_fill(edges, n_h, key, integrand,
+                          start_chunk=idx * per_shard, n_chunks=per_shard)
+        return jax.tree.map(lambda x: jax.lax.psum(x, axis_names), part)
+
+    return fill
+
+
+def replicated_shard_map(body, mesh, n_args: int):
+    """Wrap ``body`` in a replicated-in / replicated-out ``shard_map``.
+
+    ``check_rep=False``: ``pallas_call`` has no replication rule under
+    shard_map, and the psum inside the body already replicates every output
+    explicitly (each device computes the identical O(KB) adaptation state;
+    only the fill is divided).
+    """
+    return shard_map(body, mesh=mesh,
+                     in_specs=(REPLICATED,) * n_args,
+                     out_specs=REPLICATED, check_rep=False)
+
+
+def make_sharded_fill(mesh, axis_names, resolved_cfg,
+                      backend: str | None = None):
+    """Build a drop-in ``fill_fn`` for ``core.integrator.iteration_step``.
+
+    ``fill_fn(edges, n_h, key, integrand)`` shard_maps the configured fill
+    backend (default: the config's own) over the mesh axes named in
+    ``axis_names`` and psum-reduces the per-shard partials, returning the
+    same replicated result on every device.  Works eagerly and under jit
+    (``run`` jits the whole iteration around it, so adaptation stays
+    on-device, C4/C6).
+    """
+    rc = resolved_cfg
+    axis_names = tuple(axis_names)
+    local_fill = make_local_fill(rc, mesh, axis_names, backend=backend)
+
+    def fill_fn(edges, n_h, key, integrand):
+        body = lambda e, nh, k: local_fill(e, nh, k, integrand)
+        return replicated_shard_map(body, mesh, 3)(edges, n_h, key)
+
+    return fill_fn

@@ -1,5 +1,6 @@
 """Jitted wrapper exposing the Pallas fill kernels behind the core FillResult
-contract (core/fill.py BACKENDS['pallas']).
+contract (the 'pallas'/'pallas-fused' entries of the engine's backend
+registry, via core.fill.fill_pallas).
 
 The fill is scan-chunked exactly like ``core.fill.fill_reference``: chunk
 ``g`` draws its uniforms from ``fold_in(key, g)`` and its cube ids from the

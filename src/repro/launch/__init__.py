@@ -1,1 +1,1 @@
-"""Launchers: mesh construction, multi-pod dry-run, training driver."""
+"""Launchers: mesh construction + the integrate/sweep CLI entry points."""

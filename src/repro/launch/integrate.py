@@ -1,7 +1,11 @@
 """CLI driver for the VEGAS+ engine (the paper's workload).
 
   PYTHONPATH=src python -m repro.launch.integrate --integrand ridge \
-      --neval 1000000 --iters 20 --config def
+      --neval 1000000 --iters 20 --config def --backend pallas-fused
+
+Execution axes (backend / sharding / checkpointing) map 1:1 onto the unified
+``repro.engine.ExecutionConfig``; ``--plan`` prints the validated plan
+(backend capabilities, shard count, loop mode) without running it.
 """
 
 from __future__ import annotations
@@ -11,9 +15,11 @@ import time
 
 import jax
 
-from repro.core import VegasConfig, run
-from repro.core import integrands as igs
 from repro.configs.vegas import PAPER_CONFIGS
+from repro.core import VegasConfig
+from repro.core import integrands as igs
+from repro.engine import (CheckpointPolicy, ExecutionConfig, available,
+                          execute, make_plan)
 
 INTEGRANDS = {
     "sine_exp": igs.make_sine_exp,
@@ -30,6 +36,36 @@ INTEGRANDS = {
 }
 
 
+def add_execution_args(ap: argparse.ArgumentParser) -> None:
+    """The shared execution-axis flags (integrate + sweep CLIs)."""
+    ap.add_argument("--backend", choices=sorted(available()), default="ref",
+                    help="fill backend from the engine registry "
+                         "(pallas-fused = P-V3 streaming kernel)")
+    ap.add_argument("--interpret", choices=["auto", "true", "false"],
+                    default="auto",
+                    help="pallas execution mode; auto = compiled on TPU, "
+                         "interpreter elsewhere (kernels.backend_default)")
+    ap.add_argument("--tile", type=int, default=None,
+                    help="pallas tile override (default: VMEM autotune)")
+    ap.add_argument("--shard", action="store_true",
+                    help="shard the fill over all local devices "
+                         "(launch.mesh.make_local_mesh)")
+    ap.add_argument("--plan", action="store_true",
+                    help="print the validated execution plan and exit")
+
+
+def build_execution(args, **extra) -> ExecutionConfig:
+    # interpret/tile are forwarded as given; the plan validator rejects them
+    # loudly when the chosen backend declares no such knob.
+    interpret = {"auto": None, "true": True, "false": False}[args.interpret]
+    mesh = None
+    if args.shard:
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh()
+    return ExecutionConfig(backend=args.backend, interpret=interpret,
+                           tile=args.tile, mesh=mesh, **extra)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--integrand", choices=list(INTEGRANDS), default="ridge")
@@ -37,30 +73,30 @@ def main(argv=None):
     ap.add_argument("--iters", type=int, default=20)
     ap.add_argument("--skip", type=int, default=5)
     ap.add_argument("--config", choices=["def", "vf", "tq"], default="def")
-    ap.add_argument("--backend", choices=["ref", "pallas"], default="ref")
-    ap.add_argument("--interpret", choices=["auto", "true", "false"],
-                    default="auto",
-                    help="pallas execution mode; auto = compiled on TPU, "
-                         "interpreter elsewhere (kernels.backend_default)")
-    ap.add_argument("--no-fused", dest="fused", action="store_false",
-                    help="pallas: use the P-V2 baseline kernel instead of "
-                         "the P-V3 fused streaming kernel")
-    ap.add_argument("--tile", type=int, default=None,
-                    help="pallas tile override (default: VMEM autotune)")
+    ap.add_argument("--checkpoint", default=None, metavar="DIR",
+                    help="checkpoint VegasState into DIR every iteration "
+                         "(forces the host loop)")
     ap.add_argument("--seed", type=int, default=0)
+    add_execution_args(ap)
     args = ap.parse_args(argv)
 
     ig = INTEGRANDS[args.integrand]()
     base = PAPER_CONFIGS[args.config]
-    interpret = {"auto": None, "true": True, "false": False}[args.interpret]
+    execution = build_execution(
+        args, checkpoint=(CheckpointPolicy(directory=args.checkpoint)
+                          if args.checkpoint else None))
     cfg = VegasConfig(neval=args.neval, max_it=args.iters, skip=args.skip,
                       ninc=base.ninc, alpha=base.alpha, beta=base.beta,
-                      backend=args.backend, interpret=interpret,
-                      fused_cubes=args.fused, tile=args.tile)
+                      execution=execution)
+    plan = make_plan(ig, cfg)
+    if args.plan:
+        print(plan.describe())
+        return plan
     t0 = time.time()
-    res = run(ig, cfg, key=jax.random.PRNGKey(args.seed))
+    res = execute(plan, key=jax.random.PRNGKey(args.seed))
     dt = time.time() - t0
-    print(f"integrand={ig.name} dim={ig.dim} config={args.config}")
+    print(f"integrand={ig.name} dim={ig.dim} config={args.config} "
+          f"[{execution.describe()}]")
     print(f"  result  = {res.mean:.8g} +- {res.sdev:.3g} "
           f"(chi2/dof {res.chi2_dof:.2f}, {res.n_it} iterations)")
     if ig.target is not None:

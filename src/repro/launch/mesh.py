@@ -1,8 +1,8 @@
-"""Mesh construction: production (16x16 / 2x16x16) and local meshes.
+"""Mesh construction.
 
-FUNCTIONS, not module constants: importing this module must never touch
-jax device state (the dry-run sets the host-device-count override before any
-jax initialization).
+FUNCTIONS, not module constants: importing this module must never touch jax
+device state (multi-device tests set the host-device-count override before
+any jax initialization).
 
 ``make_mesh`` papers over a jax API gap: ``jax.sharding.AxisType`` (and the
 ``axis_types=`` kwarg of ``jax.make_mesh``) only exists on newer jax; on
@@ -26,18 +26,6 @@ def make_mesh(shape, axis_names):
         return jax.make_mesh(shape, axis_names,
                              axis_types=(_AxisType.Auto,) * len(axis_names))
     return jax.make_mesh(shape, axis_names)
-
-
-def make_production_mesh(*, multi_pod: bool = False):
-    """16x16 (one v5e pod, 256 chips) or 2x16x16 (2 pods)."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return make_mesh(shape, axes)
-
-
-def dp_axes(mesh) -> tuple:
-    """Data-parallel axes: ('pod','data') on the multi-pod mesh."""
-    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
 def make_local_mesh():

@@ -1,12 +1,15 @@
 """Batched scenario-sweep CLI: B integrands, one jitted program.
 
   PYTHONPATH=src python -m repro.launch.sweep --family asian --batch 8 \
-      --neval 100000 --iters 10 [--compare-serial] [--cache maps.npz]
+      --neval 100000 --iters 10 [--compare-serial] [--cache maps.npz] \
+      [--backend pallas-fused] [--shard]
 
-Sweeps a parameterized integrand family (repro.batch.family.FAMILIES) with
-the batched engine; ``--compare-serial`` also times the B-serial-runs
-baseline and reports per-scenario agreement, ``--cache`` warm-starts the
-importance maps from (and refreshes) an on-disk map cache.
+Sweeps a parameterized integrand family (repro.batch.family.FAMILIES)
+through the unified execution engine.  ``--shard`` composes the batch axis
+with the mesh axis — B scenarios × D local devices as ONE jitted program
+(the sharded batched path, DESIGN.md §9.3); ``--compare-serial`` also times
+the B-serial-runs baseline and reports per-scenario agreement; ``--cache``
+warm-starts the importance maps from (and refreshes) an on-disk map cache.
 """
 
 from __future__ import annotations
@@ -20,6 +23,8 @@ import numpy as np
 from repro.batch import MapCache, run_batch, run_serial
 from repro.batch.family import FAMILIES
 from repro.core import VegasConfig
+from repro.engine import make_plan
+from repro.launch.integrate import add_execution_args, build_execution
 
 
 def main(argv=None):
@@ -31,19 +36,21 @@ def main(argv=None):
     ap.add_argument("--skip", type=int, default=3)
     ap.add_argument("--ninc", type=int, default=128)
     ap.add_argument("--chunk", type=int, default=16_384)
-    ap.add_argument("--backend", choices=["ref", "pallas"], default="ref",
-                    help="fill backend for every scenario (pallas = fused "
-                         "P-V3 kernel, interpret mode autodetected)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--cache", default=None,
                     help="path to an .npz map cache (warm start + refresh)")
     ap.add_argument("--compare-serial", action="store_true",
                     help="also run the B-serial-calls baseline and compare")
+    add_execution_args(ap)
     args = ap.parse_args(argv)
 
     family = FAMILIES[args.family](args.batch)
+    execution = build_execution(args)
     cfg = VegasConfig(neval=args.neval, max_it=args.iters, skip=args.skip,
-                      ninc=args.ninc, chunk=args.chunk, backend=args.backend)
+                      ninc=args.ninc, chunk=args.chunk, execution=execution)
+    if args.plan:
+        print(make_plan(family, cfg).describe())
+        return None
     key = jax.random.PRNGKey(args.seed)
     cache = MapCache(args.cache) if args.cache else None
 
@@ -53,7 +60,7 @@ def main(argv=None):
 
     print(f"family={family.name} B={res.batch_size} dim={family.dim} "
           f"neval={args.neval} iters={args.iters} "
-          f"warm_start={res.warm_started}")
+          f"warm_start={res.warm_started} [{execution.describe()}]")
     params = np.asarray(jax.tree.leaves(family.params)[0])
     for b in range(res.batch_size):
         p = params[b] if params.ndim == 1 else params[b].tolist()

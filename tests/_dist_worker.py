@@ -11,6 +11,7 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
+import repro.engine as E  # noqa: E402
 from repro.core import integrator as I  # noqa: E402
 from repro.core import fill as F  # noqa: E402
 from repro.core.integrands import make_cosine  # noqa: E402
@@ -66,8 +67,8 @@ def main():
                                  chunk=2048)
         half = I.run(ig, cfg_half, key=key, fill_fn=fill2,
                      checkpoint_cb=lambda it, s: mgr.save(it, s))
-        # Restore against a freshly-initialized template (the launch/train.py
-        # pattern): only the tree STRUCTURE matters, shapes come from the file.
+        # Restore against a freshly-initialized template: only the tree
+        # STRUCTURE matters, shapes come from the file.
         like = I.init_state(ig, cfg.resolve(ig.dim), key)
         restored, step, _ = mgr.restore_latest(like)
         resumed = I.run(ig, cfg, key=key, state=restored, fill_fn=fill8)
@@ -82,7 +83,8 @@ def main():
     # fused fill must agree with BOTH the unsharded fused fill and the plain
     # reference fill at the reduction-order tolerance.
     cfg_p = I.VegasConfig(neval=20_000, max_it=4, skip=1, ninc=64, chunk=2048,
-                          backend="pallas", fused_cubes=True, interpret=True)
+                          execution=E.ExecutionConfig(backend="pallas-fused",
+                                                      interpret=True))
     rc_p = cfg_p.resolve(ig.dim)
     st_p = I.init_state(ig, rc_p, key)
     key_p = jax.random.fold_in(st_p.key, st_p.it)
@@ -111,6 +113,60 @@ def main():
     np.testing.assert_allclose(total.map_sums, plain.map_sums, rtol=2e-5)
     np.testing.assert_allclose(total.cube_s1, plain.cube_s1, rtol=2e-5, atol=1e-7)
     print("CHECK straggler OK")
+
+    # --- 6) engine: sharded x batched in ONE jitted program --------------
+    # ISSUE 4 acceptance: a B=4 integrand family on 8 devices with the
+    # pallas-fused backend executes through repro.engine as one program
+    # (iteration_step traced exactly once), and every scenario matches its
+    # serial single-scenario baseline at the tests/test_batch.py tolerance
+    # (3 combined sigma).
+    from repro.batch.engine import run_serial
+    from repro.batch.family import make_gaussian_family
+    fam = make_gaussian_family(np.linspace(0.2, 0.8, 4), dim=2)
+    cfg_b = I.VegasConfig(neval=16_000, max_it=6, skip=2, ninc=32, chunk=2048)
+    ex = E.ExecutionConfig(backend="pallas-fused", interpret=True,
+                           mesh=mesh8, shard_axes=("data",))
+    plan = E.make_plan(fam, cfg_b, execution=ex)
+    assert plan.batched and plan.n_shards == 8, plan.describe()
+
+    calls = {"trace": 0}
+    real_step = I.iteration_step
+
+    def counting_step(*a, **k):
+        calls["trace"] += 1
+        return real_step(*a, **k)
+
+    I.iteration_step = counting_step
+    try:
+        res = E.execute(plan, key=jax.random.PRNGKey(42))
+    finally:
+        I.iteration_step = real_step
+    assert calls["trace"] == 1, calls  # ONE jitted program for B x D
+
+    serial = run_serial(fam, cfg_b.with_execution(
+        E.ExecutionConfig(backend="pallas-fused", interpret=True)),
+        key=jax.random.PRNGKey(42))
+    for b in range(4):
+        comb = float(np.hypot(res.sdev[b], serial[b].sdev))
+        gap = abs(float(res.mean[b]) - serial[b].mean)
+        assert gap < 3 * comb, (b, float(res.mean[b]), serial[b].mean, comb)
+    pulls = (res.mean - fam.targets) / res.sdev
+    assert (np.abs(pulls) < 5).all(), pulls
+    print("CHECK engine_sharded_batched OK")
+
+    # plan validation rejects unsupported combinations loudly (PlanError at
+    # plan time, never a tracer failure)
+    for bad in (E.ExecutionConfig(backend="pallas-fused",
+                                  shard_axes=("data",)),       # axes, no mesh
+                E.ExecutionConfig(backend="cuda"),             # unknown name
+                E.ExecutionConfig(mesh=mesh8, tile=128)):      # knob on ref
+        try:
+            E.make_plan(fam, cfg_b, execution=bad)
+        except E.PlanError:
+            pass
+        else:
+            raise AssertionError(f"PlanError expected for {bad}")
+    print("CHECK engine_plan_validation OK")
 
     print("ALL_OK")
 

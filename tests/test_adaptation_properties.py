@@ -1,0 +1,133 @@
+"""Property-based tests (hypothesis) for the adaptation layer:
+``map.adapt_edges`` (importance-map update) and ``strat.adapt_nh``
+(stratification re-allocation) — the invariants every iteration of the
+driver relies on (DESIGN.md C2/C4)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# Property tests need hypothesis (requirements-dev.txt); skip the module —
+# not the whole collection — where it is absent.
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import map as vmap_  # noqa: E402
+from repro.core import strat  # noqa: E402
+
+
+def _random_monotone_edges(data, d, ninc):
+    """Strictly monotone per-dimension edges over [0, 1] from random widths."""
+    w = np.array([[data.draw(st.floats(0.05, 1.0)) for _ in range(ninc)]
+                  for _ in range(d)], np.float32)
+    cum = np.cumsum(w, axis=1) / w.sum(axis=1, keepdims=True)
+    return jnp.asarray(np.concatenate([np.zeros((d, 1), np.float32), cum], 1))
+
+
+# --- map.adapt_edges ---------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_adapt_edges_stay_strictly_monotone_with_fixed_endpoints(data):
+    """For any positive accumulated weights the adapted grid is still a
+    valid map: endpoints exactly fixed, interior strictly increasing."""
+    d = data.draw(st.integers(1, 4))
+    ninc = data.draw(st.sampled_from([4, 8, 16, 32]))
+    alpha = data.draw(st.floats(0.1, 2.0))
+    edges = _random_monotone_edges(data, d, ninc)
+    sums = jnp.asarray(np.array(
+        [[data.draw(st.floats(1e-2, 1e2)) for _ in range(ninc)]
+         for _ in range(d)], np.float32))
+    counts = jnp.full((d, ninc), 7.0, jnp.float32)
+    new = vmap_.adapt_edges(edges, sums, counts, alpha)
+    np.testing.assert_array_equal(np.asarray(new[:, 0]),
+                                  np.asarray(edges[:, 0]))
+    np.testing.assert_array_equal(np.asarray(new[:, -1]),
+                                  np.asarray(edges[:, -1]))
+    assert (np.diff(np.asarray(new), axis=1) > 0).all(), np.asarray(new)
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_adapt_edges_uniform_weights_are_a_fixed_point(data):
+    """Equal weight in every interval: each interval already holds an equal
+    share, so the adaptation must leave ANY monotone grid unchanged."""
+    d = data.draw(st.integers(1, 3))
+    ninc = data.draw(st.sampled_from([4, 16, 64]))
+    alpha = data.draw(st.floats(0.1, 2.0))
+    c = data.draw(st.floats(1e-3, 1e3))
+    edges = _random_monotone_edges(data, d, ninc)
+    sums = jnp.full((d, ninc), c, jnp.float32)
+    counts = jnp.full((d, ninc), 11.0, jnp.float32)
+    new = vmap_.adapt_edges(edges, sums, counts, alpha)
+    np.testing.assert_allclose(np.asarray(new), np.asarray(edges),
+                               rtol=1e-5, atol=2e-6)
+
+
+def test_adapt_edges_zero_weights_keep_grid_valid():
+    """All-zero accumulators (e.g. an integrand that vanished everywhere)
+    must not degenerate the grid."""
+    edges = vmap_.uniform_edges([0.0, 0.0], [1.0, 1.0], 16)
+    z = jnp.zeros((2, 16), jnp.float32)
+    new = vmap_.adapt_edges(edges, z, z, 0.5)
+    assert (np.diff(np.asarray(new), axis=1) > 0).all()
+    np.testing.assert_allclose(np.asarray(new), np.asarray(edges), atol=1e-6)
+
+
+# --- strat.adapt_nh ----------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(data=st.data())
+def test_adapt_nh_total_near_neval_within_capacity(data):
+    """The re-allocated totals stay inside the static capacity bound the
+    fill's eval axis is sized for (DESIGN.md C2): each cube floors at 2 and
+    the flooring loses < 1 eval per cube, so
+    ``neval - n_cubes <= sum(n_h) <= eval_capacity(neval, n_cubes)``."""
+    n_cubes = data.draw(st.integers(1, 512))
+    neval = data.draw(st.integers(n_cubes * 2, 1_000_000))
+    beta = data.draw(st.floats(0.1, 1.5))
+    d_h = jnp.asarray(np.array(
+        [data.draw(st.floats(0.0, 1e3)) for _ in range(n_cubes)], np.float32))
+    n_h = strat.adapt_nh(d_h, beta, neval)
+    assert (np.asarray(n_h) >= 2).all()          # per-cube floor
+    tot = int(np.asarray(n_h, np.int64).sum())
+    assert tot <= strat.eval_capacity(neval, n_cubes)
+    assert tot >= neval - n_cubes
+
+
+@settings(max_examples=50, deadline=None)
+@given(data=st.data())
+def test_adapt_nh_beta_zero_is_uniform(data):
+    """beta = 0 flattens the allocation signal: every cube gets the uniform
+    share (classic-VEGAS identity, within one f32-rounding eval of
+    ``uniform_nh``) regardless of d_h."""
+    n_cubes = data.draw(st.integers(1, 256))
+    neval = data.draw(st.integers(n_cubes * 2, 500_000))
+    d_h = jnp.asarray(np.array(
+        [data.draw(st.floats(0.0, 1e3)) for _ in range(n_cubes)], np.float32))
+    n_h = np.asarray(strat.adapt_nh(d_h, 0.0, neval))
+    assert (n_h == n_h[0]).all()                  # uniform across cubes
+    uniform = np.asarray(strat.uniform_nh(neval, n_cubes))
+    assert np.abs(n_h.astype(np.int64) - uniform.astype(np.int64)).max() <= 1
+
+
+def test_adapt_nh_zero_signal_falls_back_to_uniform():
+    """d_h == 0 everywhere (constant integrand): the p = d_h^beta / sum
+    branch would be 0/0; the implementation must fall back to the uniform
+    distribution instead."""
+    n_h = np.asarray(strat.adapt_nh(jnp.zeros((8,)), 0.75, 8_000))
+    assert (n_h == 1000).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_adapt_nh_allocates_monotonically_in_the_signal(data):
+    """More variance signal never gets fewer evals: the allocation is
+    monotone in d_h (up to the shared floor)."""
+    n_cubes = data.draw(st.integers(2, 128))
+    neval = data.draw(st.integers(n_cubes * 4, 200_000))
+    beta = data.draw(st.floats(0.25, 1.0))
+    d = np.sort(np.array([data.draw(st.floats(0.0, 100.0))
+                          for _ in range(n_cubes)], np.float32))
+    n_h = np.asarray(strat.adapt_nh(jnp.asarray(d), beta, neval))
+    assert (np.diff(n_h) >= 0).all()

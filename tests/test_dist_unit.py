@@ -60,8 +60,8 @@ def test_resolve_pads_n_cap_to_chunk_multiple():
 # --- CheckpointManager edge behavior ----------------------------------------
 
 def test_restore_latest_empty_dir_returns_none(tmp_path):
-    """Cold start: no checkpoints is not an error (launch/train.py resumes
-    iff restore_latest returns something)."""
+    """Cold start: no checkpoints is not an error (resume paths restart
+    fresh iff restore_latest returns something)."""
     mgr = CK.CheckpointManager(str(tmp_path), keep=2)
     assert mgr.restore_latest({"x": jnp.zeros((2,))}) is None
     # .tmp leftovers from a torn write still count as "no checkpoints".
