@@ -4,8 +4,19 @@ engine (plan -> execute), not just the fill phase.
 Where BENCH_fill.json tracks the kernel trajectory (DESIGN.md §7), these
 rows track what a user actually pays: full `core.run` wall clock — fill,
 adaptation, aggregation, loop dispatch — per backend, plus the vmapped
-batch program.  ``benchmarks.run --json`` extracts every ``run/*`` row into
+batch program, plus the adaptive early-stopping program (a `StopPolicy`
+while_loop run, with the iterations it saved recorded in the row, §10).
+``benchmarks.run --json`` extracts every ``run/*`` row into
 ``BENCH_run.json`` next to the fill artifact.
+
+Standalone pull-histogram mode (the CI `stats-smoke` artifact)::
+
+  PYTHONPATH=src python -m benchmarks.bench_runs --pulls --out PULLS.json
+
+runs B seeded scenarios of the gaussian family in one vmapped program and
+writes the pull distribution (estimate - truth) / sdev plus its histogram —
+the raw material of the statistical conformance suite
+(tests/test_statistical.py) as an inspectable artifact.
 """
 
 from __future__ import annotations
@@ -18,7 +29,7 @@ from repro.batch.family import make_gaussian_family
 from repro.core import VegasConfig
 from repro.core import run as core_run
 from repro.core.integrands import make_cosine, make_roos_arnold
-from repro.engine import ExecutionConfig
+from repro.engine import ExecutionConfig, StopPolicy
 from .common import emit, timeit
 
 
@@ -40,6 +51,22 @@ def run(fast=True):
                  f"evals_per_s={neval * max_it / t:,.0f}",
                  n_eval=neval, backend=backend, max_it=max_it)
 
+    # Adaptive early stopping: the same program under a loose rtol target.
+    # The row records the iterations the while_loop did not run — the GPU
+    # cycles a convergence-targeted run saves over the fixed loop (§10).
+    ig = make_cosine(dim=6)
+    cfg_stop = VegasConfig(
+        execution=ExecutionConfig(stop=StopPolicy(rtol=5e-4, min_it=2)),
+        **base)
+    res = core_run(ig, cfg_stop, key=key)
+    t = timeit(lambda: core_run(ig, cfg_stop, key=key), repeats=3, warmup=1)
+    emit("run/cosine_d6/ref/rtol=5e-4", t,
+         f"n_it_used={res.n_it_used}/{max_it} "
+         f"it_saved={max_it - res.n_it_used}",
+         n_eval=neval, backend="ref", max_it=max_it,
+         n_it_used=int(res.n_it_used),
+         it_saved=int(max_it - res.n_it_used))
+
     # The batched whole-run program (B scenarios, one jitted fori_loop).
     b = 4
     fam = make_gaussian_family(np.linspace(0.2, 0.8, b))
@@ -49,6 +76,70 @@ def run(fast=True):
          f"evals_per_s={b * neval * max_it / t:,.0f}",
          n_eval=neval, backend="ref", max_it=max_it, batch=b)
 
+    # ... and with per-scenario stop masks: scenario-iterations saved.
+    cfg_bstop = VegasConfig(
+        execution=ExecutionConfig(stop=StopPolicy(rtol=5e-4, min_it=2)),
+        **base)
+    bres = run_batch(fam, cfg_bstop, key=key)
+    t = timeit(lambda: run_batch(fam, cfg_bstop, key=key), repeats=3,
+               warmup=1)
+    saved = b * max_it - int(bres.n_it_used.sum())
+    emit(f"run/gaussian_family/B={b}/ref/rtol=5e-4", t,
+         f"n_it_used={bres.n_it_used.tolist()} it_saved={saved}",
+         n_eval=neval, backend="ref", max_it=max_it, batch=b,
+         it_saved=saved)
+
+
+#: The gaussian-peak pull-distribution setup, shared VERBATIM with
+#: tests/test_statistical.py (which imports these): the PULLS.json artifact
+#: CI uploads must describe exactly the distribution the conformance suite
+#: asserts on — one definition, so the two cannot drift.
+PULL_FAMILY_KW = dict(dim=3, sigma=0.2)
+PULL_CFG_KW = dict(neval=6_000, max_it=10, skip=5, ninc=64, chunk=2048)
+
+
+def pulls(out: str = "PULLS.json", b: int = 50, seed: int = 0) -> dict:
+    """B independent seeded runs of one integrand as ONE vmapped program
+    (identical params, per-scenario keys), reduced to the pull distribution
+    ``(estimate - truth) / sdev`` and a histogram.  Written as JSON for the
+    CI artifact; tests/test_statistical.py asserts the same quantities on
+    the same configuration (PULL_FAMILY_KW / PULL_CFG_KW)."""
+    import json
+
+    fam = make_gaussian_family(np.full(b, 0.5), **PULL_FAMILY_KW)
+    cfg = VegasConfig(**PULL_CFG_KW)
+    res = run_batch(fam, cfg, key=jax.random.PRNGKey(seed))
+    p = (res.mean - fam.targets) / res.sdev
+    edges = np.linspace(-4.0, 4.0, 17)
+    hist, _ = np.histogram(p, bins=edges)
+    payload = {
+        "family": fam.name, "b": b, "seed": seed, **PULL_CFG_KW,
+        "pulls": np.round(p, 6).tolist(),
+        "hist_edges": edges.tolist(), "hist_counts": hist.tolist(),
+        "mean_pull": float(np.mean(p)), "std_pull": float(np.std(p)),
+        "frac_within_1p96": float(np.mean(np.abs(p) <= 1.96)),
+        "mean_chi2_dof": float(np.mean(res.chi2_dof)),
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {out}: mean_pull={payload['mean_pull']:+.3f} "
+          f"std_pull={payload['std_pull']:.3f} "
+          f"frac|pull|<=1.96={payload['frac_within_1p96']:.2f}")
+    return payload
+
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pulls", action="store_true",
+                    help="write the pull-distribution artifact instead of "
+                         "timing rows")
+    ap.add_argument("--out", default="PULLS.json")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=50)
+    args = ap.parse_args()
+    if args.pulls:
+        pulls(out=args.out, b=args.batch, seed=args.seed)
+    else:
+        run()

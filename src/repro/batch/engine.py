@@ -40,8 +40,11 @@ class BatchResult:
     sdev: np.ndarray        # (B,)
     chi2_dof: np.ndarray    # (B,)
     n_used: np.ndarray      # (B,) iterations entering each combination
+    n_it_used: np.ndarray   # (B,) iterations actually executed per scenario
+                            # (< max_it where a StopPolicy converged, §10)
     iter_means: np.ndarray  # (B, max_it)
-    iter_sdevs: np.ndarray  # (B, max_it)
+    iter_sdevs: np.ndarray  # (B, max_it); slots >= n_it_used[b] hold the
+                            # inf sentinel of never-executed iterations
     states: core.VegasState  # batched pytree: every leaf has leading dim B
     warm_started: bool = False
 
@@ -54,7 +57,8 @@ class BatchResult:
                  f"warm_started={self.warm_started})"]
         for b in range(self.batch_size):
             lines.append(f"  [{b}] {self.mean[b]:.8g} +- {self.sdev[b]:.3g} "
-                         f"(chi2/dof {self.chi2_dof[b]:.2f})")
+                         f"(chi2/dof {self.chi2_dof[b]:.2f}, "
+                         f"it {self.n_it_used[b]})")
         return "\n".join(lines)
 
 

@@ -157,14 +157,17 @@ class VegasResult:
     mean: float
     sdev: float
     chi2_dof: float
-    n_it: int
+    n_it: int             # iterations entering the combination (n_used)
     iter_means: jax.Array
     iter_sdevs: jax.Array
     state: VegasState
+    n_it_used: int = 0    # iterations actually executed (< max_it when a
+                          # StopPolicy converged the run early, §10)
 
     def __repr__(self):
         return (f"VegasResult(mean={self.mean:.8g}, sdev={self.sdev:.3g}, "
-                f"chi2/dof={self.chi2_dof:.2f}, n_it={self.n_it})")
+                f"chi2/dof={self.chi2_dof:.2f}, n_it={self.n_it}, "
+                f"n_it_used={self.n_it_used})")
 
 
 def init_state(integrand: Integrand, cfg: ResolvedConfig, key) -> VegasState:
@@ -206,6 +209,16 @@ def combine_results(results: jax.Array, skip: int, n_done: int):
     """Inverse-variance weighted combination across iterations (eq. (8)-(9))
     plus the chi^2/dof consistency diagnostic vegas reports.
 
+    Sentinel contract (§10): the results buffer is always fixed-shape
+    ``(max_it, 2)``; iterations the loop never executed keep the
+    ``(0.0, inf)`` fill from ``init_state``.  Slots with index ``>= n_done``
+    are excluded by the explicit ``idx < n_done`` mask — and even if a slot
+    past ``n_done`` held finite garbage it could not leak in — while the
+    ``isfinite`` guard independently drops the inf sentinels, so the stats
+    ignore unfilled slots for every ``n_done < max_it``
+    (tests/test_early_stop.py proves both properties).  ``n_done`` may be a
+    traced scalar (the adaptive while_loop evaluates this every iteration).
+
     Degenerate case: when no iteration is usable (every sig2 is inf or
     non-finite, so ``wsum == 0``) the result is the NaN-free sentinel
     ``(0.0, inf, 0.0, 0)`` — zero information, not a silent NaN.
@@ -226,19 +239,72 @@ def combine_results(results: jax.Array, skip: int, n_done: int):
 
 
 def run_loop(state: VegasState, integrand: Integrand, cfg: ResolvedConfig,
-             start: int, fill_fn=None) -> VegasState:
-    """The whole iteration loop as one traced program: ``lax.fori_loop`` over
-    :func:`iteration_step` from ``start`` to ``cfg.max_it``.
+             start: int, fill_fn=None, *, stop=None,
+             stop_sync=None) -> VegasState:
+    """The whole iteration loop as one traced program.
 
-    This is the jitted single-program path of ``run`` (no host sync between
-    iterations, DESIGN.md B1) and the unit the batch engine ``vmap``s over
-    scenarios (``repro.batch.engine``).  ``iteration_step`` keys its RNG and
-    results slot off ``state.it``, so looping over it is bit-identical to
-    stepping it from a host loop (checked by tests/test_determinism.py).
+    Fixed-length mode (no active stop policy): ``lax.fori_loop`` over
+    :func:`iteration_step` from ``start`` to ``cfg.max_it``.  This is the
+    jitted single-program path of ``run`` (no host sync between iterations,
+    DESIGN.md B1) and the unit the batch engine ``vmap``s over scenarios
+    (``repro.batch.engine``).  ``iteration_step`` keys its RNG and results
+    slot off ``state.it``, so looping over it is bit-identical to stepping
+    it from a host loop (checked by tests/test_determinism.py).
+
+    Adaptive mode (``stop`` is an active `repro.engine.StopPolicy`, §10):
+    the same ``iteration_step`` under a fixed-shape ``lax.while_loop``.  The
+    carry is ``(state, running stats, continue?)`` where the running
+    ``(mean, sdev, chi2_dof)`` are re-derived from the results buffer by
+    :func:`combine_results` after every iteration; the loop exits once the
+    combined sdev meets ``max(rtol * |mean|, atol)`` (never before
+    ``stop.min_it``) or ``max_it`` is reached.  Nothing about the state's
+    shape changes — the ``(max_it, 2)`` buffer keeps its ``sigma2 = inf``
+    sentinels past ``state.it`` — so the program stays jittable, resumes
+    from fixed-loop checkpoints (the running stats are a pure function of
+    the carried results buffer, so a resume re-derives them exactly), and
+    ``vmap``s: under the while_loop batching rule, scenarios whose predicate
+    went false keep their old carry via ``select`` — converged lanes become
+    no-op iterations while stragglers continue, one shared trace.
+
+    ``stop_sync`` (optional) reduces the per-iteration continue decision
+    across mesh axes when the loop itself runs inside a ``shard_map``
+    (`engine.sharding.make_stop_sync`): every shard computes the identical
+    replicated statistics, and the explicit all-agree reduction guarantees
+    the loop cannot diverge across devices.
     """
-    return jax.lax.fori_loop(
-        start, cfg.max_it,
-        lambda _, s: iteration_step(s, integrand, cfg, fill_fn), state)
+    if stop is None:
+        stop = getattr(cfg.execution, "stop", None)
+    if stop is None or not stop.active:
+        return jax.lax.fori_loop(
+            start, cfg.max_it,
+            lambda _, s: iteration_step(s, integrand, cfg, fill_fn), state)
+
+    def running_stats(s):
+        mean, sdev, chi2_dof, _ = combine_results(s.results, cfg.skip, s.it)
+        return mean, sdev, chi2_dof
+
+    def wants_more(s, stats):
+        mean, sdev, _ = stats
+        cont = (s.it < cfg.max_it) & ~stop.converged(mean, sdev, s.it)
+        if stop_sync is not None:
+            cont = stop_sync(cont)
+        return cont
+
+    # The running stats ride the carry next to the continue flag: cond
+    # reads only the flag (the decision is made in the body, where
+    # stop_sync can psum it), while the carried (mean, sdev, chi2_dof)
+    # keep the §10 contract that the stop statistics live alongside the
+    # state — inspectable mid-loop and re-derivable on resume.
+    def body(carry):
+        s, _, _ = carry
+        s = iteration_step(s, integrand, cfg, fill_fn)
+        stats = running_stats(s)
+        return s, stats, wants_more(s, stats)
+
+    stats0 = running_stats(state)
+    carry = (state, stats0, wants_more(state, stats0))
+    state, _, _ = jax.lax.while_loop(lambda c: c[2], body, carry)
+    return state
 
 
 def run(integrand: Integrand, cfg: VegasConfig | None = None, *,
@@ -247,10 +313,13 @@ def run(integrand: Integrand, cfg: VegasConfig | None = None, *,
     """Run VEGAS+ to completion (or resume from ``state``).
 
     Thin adapter over the execution engine: ``make_plan`` validates the
-    config's execution axes (backend/sharding/checkpoint, `repro.engine`)
-    and ``execute`` runs the plan.  With no checkpoint policy the whole loop
-    executes as a single jitted on-device program (``run_loop``): zero host
-    round-trips between iterations.
+    config's execution axes (backend/sharding/checkpoint/stop,
+    `repro.engine`) and ``execute`` runs the plan.  With no checkpoint
+    policy the whole loop executes as a single jitted on-device program
+    (``run_loop``): zero host round-trips between iterations.  An active
+    ``ExecutionConfig(stop=StopPolicy(...))`` ends the loop as soon as the
+    combined sdev meets the target — ``VegasResult.n_it_used`` reports how
+    many iterations actually ran (§10).
 
     Legacy extension hooks, forwarded to the executor unchanged:
     ``fill_fn(edges, n_h, key_it, integrand) -> FillResult`` replaces the

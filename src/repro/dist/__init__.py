@@ -13,6 +13,7 @@ from . import checkpoint, sharded_fill  # noqa: F401
 from .checkpoint import CheckpointManager, latest, restore, save  # noqa: F401
 from .sharded_fill import (  # noqa: F401
     make_sharded_fill,
+    make_stop_sync,
     recompute_shard,
     shard_chunk_range,
 )

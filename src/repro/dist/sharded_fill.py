@@ -25,6 +25,14 @@ tolerance covers float32 reduction-order differences only, the sampled
 streams are bit-identical) is what makes elastic restart (checkpoint.py) and
 straggler re-dispatch (:func:`recompute_shard`, DESIGN.md D3/§5) safe.
 
+Early stopping under distribution (DESIGN.md §10): a `StopPolicy` run on a
+sharded plan keeps the while_loop's continue decision consistent across
+devices by construction.  The single-scenario path evaluates the decision
+OUTSIDE the shard_map on the psum-replicated statistics; the sharded batched
+path evaluates it inside the shard_map and pmin-agrees it across the mesh
+axes (:func:`repro.engine.sharding.make_stop_sync`, re-exported here), so
+every shard executes the identical trip count.
+
 Prefer expressing sharding through the plan layer
 (``ExecutionConfig(mesh=..., shard_axes=...)``); :func:`make_sharded_fill`
 remains the drop-in ``fill_fn`` hook for callers that wire the loop by hand.
@@ -36,6 +44,7 @@ from repro.engine import backends as backends_mod
 from repro.engine.sharding import (  # noqa: F401  (re-exported API)
     make_local_fill,
     make_sharded_fill,
+    make_stop_sync,
     mesh_shard_count,
     shard_chunk_range,
 )

@@ -1,9 +1,9 @@
 """repro.engine: the unified execution-plan layer (DESIGN.md §9).
 
-One pipeline — ``Plan -> Executor -> Result`` — composes the four orthogonal
+One pipeline — ``Plan -> Executor -> Result`` — composes the orthogonal
 execution axes every run path shares:
 
-  backend × batching × sharding × checkpointing
+  backend × batching × sharding × checkpointing × stopping
 
 `make_plan` validates a (workload, VegasConfig, ExecutionConfig) combination
 against the capability-declaring backend registry (`engine.backends`) and
@@ -31,22 +31,27 @@ from .backends import (  # noqa: F401
     register,
 )
 from .backends import get as get_backend  # noqa: F401
-from .config import BATCH_MODES, CheckpointPolicy, ExecutionConfig  # noqa: F401
+from .config import (  # noqa: F401
+    BATCH_MODES,
+    CheckpointPolicy,
+    ExecutionConfig,
+    StopPolicy,
+)
 
 _LAZY = {
     "Plan": "plan", "PlanError": "plan", "make_plan": "plan",
     "execute": "executor",
     "make_sharded_fill": "sharding", "make_local_fill": "sharding",
     "shard_chunk_range": "sharding", "mesh_shard_count": "sharding",
-    "replicated_shard_map": "sharding",
+    "replicated_shard_map": "sharding", "make_stop_sync": "sharding",
     "plan": "plan", "executor": "executor", "sharding": "sharding",
 }
 
 __all__ = [
     "BATCH_MODES", "BackendSpec", "CAPABILITIES", "CheckpointPolicy",
-    "ExecutionConfig", "Plan", "PlanError", "available", "bind_fill",
-    "capability_matrix", "execute", "get_backend", "make_plan",
-    "make_sharded_fill", "register",
+    "ExecutionConfig", "Plan", "PlanError", "StopPolicy", "available",
+    "bind_fill", "capability_matrix", "execute", "get_backend", "make_plan",
+    "make_sharded_fill", "make_stop_sync", "register",
 ]
 
 

@@ -18,7 +18,11 @@ Capabilities (DESIGN.md §9 capability matrix):
   * ``in-kernel-rng``    — regenerates its uniforms inside the kernel
                            (no per-eval RNG traffic when compiled, P-V3);
   * ``closure-hoisting`` — accepts integrands that close over arrays
-                           (ridge's peak table, vmapped family params).
+                           (ridge's peak table, vmapped family params);
+  * ``early-stop``       — traces correctly inside the adaptive
+                           ``lax.while_loop`` body (`StopPolicy` runs, §10):
+                           no iteration-index specialization, no host
+                           callbacks inside the fill.
 """
 
 from __future__ import annotations
@@ -33,8 +37,10 @@ SHARDABLE = "shardable"
 VMAPPABLE = "vmappable"
 IN_KERNEL_RNG = "in-kernel-rng"
 CLOSURE_HOISTING = "closure-hoisting"
+EARLY_STOP = "early-stop"
 
-CAPABILITIES = (SHARDABLE, VMAPPABLE, IN_KERNEL_RNG, CLOSURE_HOISTING)
+CAPABILITIES = (SHARDABLE, VMAPPABLE, IN_KERNEL_RNG, CLOSURE_HOISTING,
+                EARLY_STOP)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,7 +124,8 @@ def capability_matrix() -> str:
 register(BackendSpec(
     name="ref",
     fill=fill_mod.fill_reference,
-    capabilities=frozenset({SHARDABLE, VMAPPABLE, CLOSURE_HOISTING}),
+    capabilities=frozenset({SHARDABLE, VMAPPABLE, CLOSURE_HOISTING,
+                            EARLY_STOP}),
     knobs=(),
     dtypes=("float32", "float64"),
     doc="pure-jnp oracle: scatter-add accumulation, chunked lax.scan",
@@ -127,7 +134,8 @@ register(BackendSpec(
 register(BackendSpec(
     name="pallas",
     fill=fill_mod.fill_pallas,
-    capabilities=frozenset({SHARDABLE, VMAPPABLE, CLOSURE_HOISTING}),
+    capabilities=frozenset({SHARDABLE, VMAPPABLE, CLOSURE_HOISTING,
+                            EARLY_STOP}),
     knobs=("interpret", "tile"),
     fixed={"fused_cubes": False},
     dtypes=("float32",),
@@ -138,7 +146,7 @@ register(BackendSpec(
     name="pallas-fused",
     fill=fill_mod.fill_pallas,
     capabilities=frozenset({SHARDABLE, VMAPPABLE, IN_KERNEL_RNG,
-                            CLOSURE_HOISTING}),
+                            CLOSURE_HOISTING, EARLY_STOP}),
     knobs=("interpret", "tile"),
     fixed={"fused_cubes": True},
     dtypes=("float32",),

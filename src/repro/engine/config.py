@@ -3,8 +3,8 @@ computes.
 
 `core.integrator.VegasConfig` carries the algorithm parameters (neval, ninc,
 alpha, beta, ... — the paper's Table 2 names); :class:`ExecutionConfig`
-carries the four orthogonal execution axes the engine composes
-(DESIGN.md §9):
+carries the orthogonal execution axes the engine composes
+(DESIGN.md §9, §10):
 
   * **backend**  — which fill implementation (`engine.backends` registry:
                    ``ref`` / ``pallas`` / ``pallas-fused``) plus its knobs
@@ -15,7 +15,10 @@ carries the four orthogonal execution axes the engine composes
                    chunk axis over (`engine.sharding`);
   * **checkpointing** — a :class:`CheckpointPolicy` that switches the run to
                    the host-side loop and persists `VegasState` every
-                   iteration (`dist.checkpoint`).
+                   iteration (`dist.checkpoint`);
+  * **stopping**  — a :class:`StopPolicy` convergence target (rtol/atol/
+                   min_it) that turns the fixed ``fori_loop`` into an
+                   adaptive fixed-shape ``lax.while_loop`` (DESIGN.md §10).
 
 The split exists so that every run path — single scenario, batched family,
 sharded fill, and their combinations — consumes ONE config object instead of
@@ -32,6 +35,48 @@ LEGACY_EXEC_FIELDS = ("backend", "interpret", "fused_cubes", "tile")
 
 #: Valid values of ExecutionConfig.batch.
 BATCH_MODES = ("auto", "vmap", "serial")
+
+
+@dataclasses.dataclass(frozen=True)
+class StopPolicy:
+    """Convergence target for the adaptive iteration loop (DESIGN.md §10).
+
+    A run stops once its inverse-variance combined estimate satisfies the
+    vegas package's criterion ``sdev <= max(rtol * |mean|, atol)`` AND at
+    least ``min_it`` iterations have executed.  With both tolerances at 0
+    the policy is inert (``make_plan`` normalizes it to ``None`` and the
+    fixed-length ``fori_loop`` runs).
+
+    The loop stays a fixed-shape ``lax.while_loop`` — the results buffer is
+    always ``(max_it, 2)`` and unfilled slots keep the ``sigma2 = inf``
+    sentinel — so a stop-policy program is jittable, vmappable (per-scenario
+    stop masks come from the while_loop batching rule), and resumes from
+    the same checkpoints as a fixed run.  ``skip`` iterations never enter
+    the combination, so the loop cannot stop before ``skip + 1`` iterations
+    regardless of ``min_it`` (the combined sdev is still ``inf`` there).
+    """
+    rtol: float = 0.0
+    atol: float = 0.0
+    min_it: int = 2
+
+    @property
+    def active(self) -> bool:
+        return self.rtol > 0.0 or self.atol > 0.0
+
+    def converged(self, mean, sdev, n_done):
+        """Traced convergence predicate on the running combined stats."""
+        import jax.numpy as jnp
+        target = jnp.maximum(self.rtol * jnp.abs(mean), self.atol)
+        return (n_done >= self.min_it) & (sdev <= target)
+
+    def describe(self) -> str:
+        bits = []
+        if self.rtol > 0:
+            bits.append(f"rtol={self.rtol:g}")
+        if self.atol > 0:
+            bits.append(f"atol={self.atol:g}")
+        bits.append(f"min_it={self.min_it}")
+        return ",".join(bits)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,7 +115,7 @@ class CheckpointPolicy:
 
 @dataclasses.dataclass(frozen=True)
 class ExecutionConfig:
-    """The four execution axes, as data.  Validation happens at plan time
+    """The execution axes, as data.  Validation happens at plan time
     (`engine.plan.make_plan`), not here — so configs stay cheap to build and
     the error surfaces exactly once, with the full workload context."""
     backend: str = "ref"            # engine.backends registry name
@@ -80,6 +125,7 @@ class ExecutionConfig:
     mesh: Any = None                # jax Mesh; None = unsharded
     shard_axes: tuple[str, ...] | None = None  # mesh axes to shard fill over
     checkpoint: CheckpointPolicy | None = None
+    stop: StopPolicy | None = None  # convergence target -> while_loop (§10)
 
     def with_legacy(self, **flat) -> "ExecutionConfig":
         """Fold the pre-engine flat `VegasConfig` fields (``backend``,
@@ -121,4 +167,6 @@ class ExecutionConfig:
             bits.append(f"shard={shape}@{','.join(axes)}")
         if self.checkpoint is not None:
             bits.append("checkpoint=on")
+        if self.stop is not None and self.stop.active:
+            bits.append(f"stop[{self.stop.describe()}]")
         return " ".join(bits)

@@ -1,6 +1,6 @@
 """Executor: run a validated :class:`~repro.engine.plan.Plan`.
 
-One entry point, :func:`execute`, composes the four plan axes into a single
+One entry point, :func:`execute`, composes the plan axes into a single
 program per run:
 
   * **single scenario** — `core.run_loop` as one jitted ``fori_loop``
@@ -14,7 +14,12 @@ program per run:
     psum inline — B integrands × D devices as ONE jitted XLA program, the
     combination the pre-engine run paths could not express;
   * **checkpointing**   — the policy's callback after every iteration on the
-    host-loop path, composing with sharding (mesh-free payload, §5).
+    host-loop path, composing with sharding (mesh-free payload, §5);
+  * **stopping**        — an active `StopPolicy` swaps the fori_loop for the
+    fixed-shape while_loop (§10): single runs stop when the combined sdev
+    target is met, batched runs carry per-scenario stop masks, and the
+    sharded batched program pmin-agrees the decision across the mesh
+    (`sharding.make_stop_sync`).
 
 `core.run` and `batch.run_batch` are thin adapters over this module.
 """
@@ -97,6 +102,14 @@ def _execute_single(plan: Plan, key, state, fill_fn, checkpoint_cb):
         fill_fn = _plan_fill_fn(plan)
     if checkpoint_cb is None and plan.checkpoint is not None:
         checkpoint_cb = plan.checkpoint.build_callback()
+    if checkpoint_cb is not None and plan.stop is not None:
+        # Same conflict make_plan rejects for the plan-level policy: the
+        # legacy hook forces the host loop, the stop policy is the on-device
+        # while_loop.  One implementation of the stop semantics, not two.
+        raise ValueError(
+            "checkpoint_cb forces the host loop and cannot combine with a "
+            "StopPolicy (the on-device while_loop); checkpoint with a fixed "
+            "loop, then resume the saved state under the stop policy")
 
     if state is None:
         state = core.init_state(integrand, cfg, key)
@@ -113,10 +126,11 @@ def _execute_single(plan: Plan, key, state, fill_fn, checkpoint_cb):
 
     start = int(state.it)
     if checkpoint_cb is None:
-        # On-device loop: one jitted program for the whole run.
+        # On-device loop: one jitted program for the whole run (fori_loop,
+        # or the stop policy's fixed-shape while_loop).
         prog = jax.jit(functools.partial(
             core.run_loop, integrand=integrand, cfg=cfg, start=start,
-            fill_fn=fill_fn), donate_argnums=0)
+            fill_fn=fill_fn, stop=plan.stop), donate_argnums=0)
         state = prog(state)
     else:
         step = jax.jit(functools.partial(
@@ -127,12 +141,14 @@ def _execute_single(plan: Plan, key, state, fill_fn, checkpoint_cb):
             jax.block_until_ready(state.results)
             checkpoint_cb(it, state)
 
+    n_it_used = int(state.it)
     mean, sdev, chi2_dof, n_used = core.combine_results(
-        state.results, cfg.skip, int(state.it))
+        state.results, cfg.skip, n_it_used)
     means, sig2 = state.results[:, 0], state.results[:, 1]
     return core.VegasResult(float(mean), float(sdev), float(chi2_dof),
-                            int(n_used), means[: int(state.it)],
-                            jnp.sqrt(sig2[: int(state.it)]), state)
+                            int(n_used), means[:n_it_used],
+                            jnp.sqrt(sig2[:n_it_used]), state,
+                            n_it_used=n_it_used)
 
 
 # --- batched family ----------------------------------------------------------
@@ -149,14 +165,21 @@ def _execute_family_vmap(plan: Plan, key, cache):
         edges0 = jnp.broadcast_to(uni, (b,) + uni.shape)
 
     fill_fn = _plan_fill_fn(plan, local=True)
+    # Per-scenario stop masks come from vmapping the while_loop itself
+    # (converged lanes keep their old carry); under the sharded batched
+    # program the continue decision is additionally pmin-agreed across the
+    # mesh so all shards run the same trip count (§10).
+    stop_sync = (sharding_mod.make_stop_sync(plan.shard_axes)
+                 if plan.stop is not None and plan.n_shards > 1 else None)
 
     def one(params, key_b, edges0_b):
         ig = family.bind(params)
         st = core.init_state(ig, cfg, key_b)
         st = core.VegasState(edges0_b, st.n_h, st.key, st.it, st.results)
-        st = core.run_loop(st, ig, cfg, 0, fill_fn=fill_fn)
+        st = core.run_loop(st, ig, cfg, 0, fill_fn=fill_fn, stop=plan.stop,
+                           stop_sync=stop_sync)
         mean, sdev, chi2_dof, n_used = core.combine_results(
-            st.results, cfg.skip, cfg.max_it)
+            st.results, cfg.skip, st.it)
         return st, mean, sdev, chi2_dof, n_used
 
     batched = jax.vmap(one)
@@ -173,9 +196,13 @@ def _execute_family_vmap(plan: Plan, key, cache):
     if cache is not None:
         cache.put(family, cfg, states.edges)
 
+    # iter_sdevs keeps the buffer's inf sentinels past each scenario's
+    # n_it_used slot — consumers filter on n_it_used (combine_results
+    # already did, per scenario, via its n_done mask).
     sig2 = np.asarray(states.results[:, :, 1])
     return BatchResult(np.asarray(mean), np.asarray(sdev),
                        np.asarray(chi2_dof), np.asarray(n_used),
+                       np.asarray(states.it, dtype=np.int64),
                        np.asarray(states.results[:, :, 0]), np.sqrt(sig2),
                        states, warm_started=warm)
 

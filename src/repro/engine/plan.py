@@ -21,7 +21,8 @@ from repro.core import integrator as core
 
 from . import backends as backends_mod
 from . import sharding as sharding_mod
-from .config import BATCH_MODES, CheckpointPolicy, ExecutionConfig
+from .config import (BATCH_MODES, CheckpointPolicy, ExecutionConfig,
+                     StopPolicy)
 
 
 class PlanError(ValueError):
@@ -42,6 +43,7 @@ class Plan:
     shard_axes: tuple[str, ...]
     n_shards: int
     checkpoint: CheckpointPolicy | None
+    stop: StopPolicy | None             # None, or an ACTIVE policy (§10)
 
     def describe(self) -> str:
         w = self.workload
@@ -53,7 +55,7 @@ class Plan:
             f"[{', '.join(sorted(self.backend.capabilities))}]",
             f"  batching   {'vmap B=' + str(self.batch_size) if self.batched else ('serial B=' + str(self.batch_size) if self.batch_size > 1 else 'single scenario')}",
             f"  sharding   {str(self.n_shards) + ' shards @ ' + ','.join(self.shard_axes) if self.n_shards > 1 else 'none'}",
-            f"  loop       {'host (checkpointing)' if self.checkpoint else 'on-device fori_loop'}",
+            f"  loop       {'host (checkpointing)' if self.checkpoint else ('on-device while_loop [stop: ' + self.stop.describe() + ']' if self.stop else 'on-device fori_loop')}",
         ]
         return "\n".join(lines)
 
@@ -163,10 +165,38 @@ def make_plan(workload, cfg: core.VegasConfig | None = None,
             raise PlanError(
                 "CheckpointPolicy needs a directory or a callback")
 
+    # --- stop axis ----------------------------------------------------------
+    stop = execution.stop
+    if stop is not None:
+        if stop.rtol < 0 or stop.atol < 0 or stop.min_it < 0:
+            raise PlanError(
+                f"StopPolicy fields must be non-negative, got "
+                f"rtol={stop.rtol}, atol={stop.atol}, min_it={stop.min_it}")
+        if not stop.active:
+            stop = None  # rtol == atol == 0: inert, run the fixed loop
+    if stop is not None:
+        if ckpt is not None:
+            raise PlanError(
+                "stop + checkpoint conflict: a StopPolicy runs the "
+                "on-device while_loop, a CheckpointPolicy forces the "
+                "per-iteration host loop — drop one (resuming FROM a "
+                "checkpoint into a stop-policy run is supported: pass the "
+                "restored state to run/execute)")
+        if not spec.supports(backends_mod.EARLY_STOP):
+            raise PlanError(
+                f"backend {spec.name!r} does not declare "
+                f"'{backends_mod.EARLY_STOP}'; early-stop capable backends: "
+                f"{_caps(backends_mod.EARLY_STOP)}")
+        if stop.min_it >= rcfg.max_it:
+            raise PlanError(
+                f"StopPolicy(min_it={stop.min_it}) >= max_it="
+                f"{rcfg.max_it}: the policy could never stop early — "
+                f"lower min_it or drop the policy")
+
     return Plan(workload=workload, cfg=rcfg, execution=execution,
                 backend=spec, is_family=is_family, batched=batched,
                 batch_size=batch_size, mesh=mesh, shard_axes=shard_axes,
-                n_shards=n_shards, checkpoint=ckpt)
+                n_shards=n_shards, checkpoint=ckpt, stop=stop)
 
 
 def _caps(capability: str) -> list[str]:

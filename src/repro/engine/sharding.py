@@ -98,6 +98,29 @@ def replicated_shard_map(body, mesh, n_args: int):
                      out_specs=REPLICATED, check_rep=False)
 
 
+def make_stop_sync(axis_names):
+    """All-shards agreement on the adaptive loop's continue decision (§10).
+
+    For use INSIDE a ``shard_map`` body that runs the stop-policy
+    ``while_loop`` (the sharded batched program): ``sync(cont)`` pmin-reduces
+    the boolean over ``axis_names``, so the loop continues only while EVERY
+    shard wants to.  Each shard computes the identical replicated statistics
+    (the fill is already psum-reduced), making the reduction a formality —
+    but the explicit agreement guarantees the while_loop trip count cannot
+    diverge across devices even if a backend's reduction order ever did.
+
+    The single-scenario sharded path needs no sync: there the ``shard_map``
+    wraps only the fill, the while_loop runs outside it on replicated
+    values, and no mesh axis is in scope at the decision point.
+    """
+    axis_names = tuple(axis_names)
+
+    def sync(cont):
+        return jax.lax.pmin(cont.astype(jnp.int32), axis_names) > 0
+
+    return sync
+
+
 def make_sharded_fill(mesh, axis_names, resolved_cfg,
                       backend: str | None = None):
     """Build a drop-in ``fill_fn`` for ``core.integrator.iteration_step``.

@@ -3,8 +3,10 @@
   PYTHONPATH=src python -m repro.launch.integrate --integrand ridge \
       --neval 1000000 --iters 20 --config def --backend pallas-fused
 
-Execution axes (backend / sharding / checkpointing) map 1:1 onto the unified
-``repro.engine.ExecutionConfig``; ``--plan`` prints the validated plan
+Execution axes (backend / sharding / checkpointing / stopping) map 1:1 onto
+the unified ``repro.engine.ExecutionConfig``; ``--rtol``/``--atol`` set a
+`StopPolicy` convergence target (the run stops once the combined sdev meets
+it, reported as ``n_it_used``); ``--plan`` prints the validated plan
 (backend capabilities, shard count, loop mode) without running it.
 """
 
@@ -18,8 +20,8 @@ import jax
 from repro.configs.vegas import PAPER_CONFIGS
 from repro.core import VegasConfig
 from repro.core import integrands as igs
-from repro.engine import (CheckpointPolicy, ExecutionConfig, available,
-                          execute, make_plan)
+from repro.engine import (CheckpointPolicy, ExecutionConfig, StopPolicy,
+                          available, execute, make_plan)
 
 INTEGRANDS = {
     "sine_exp": igs.make_sine_exp,
@@ -50,6 +52,14 @@ def add_execution_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--shard", action="store_true",
                     help="shard the fill over all local devices "
                          "(launch.mesh.make_local_mesh)")
+    ap.add_argument("--rtol", type=float, default=0.0,
+                    help="stop once combined sdev <= rtol * |mean| "
+                         "(adaptive while_loop; 0 = fixed-length loop)")
+    ap.add_argument("--atol", type=float, default=0.0,
+                    help="stop once combined sdev <= atol "
+                         "(combines with --rtol as max(rtol*|mean|, atol))")
+    ap.add_argument("--min-it", type=int, default=2,
+                    help="never stop before this many iterations")
     ap.add_argument("--plan", action="store_true",
                     help="print the validated execution plan and exit")
 
@@ -62,8 +72,13 @@ def build_execution(args, **extra) -> ExecutionConfig:
     if args.shard:
         from repro.launch.mesh import make_local_mesh
         mesh = make_local_mesh()
+    # Any nonzero tolerance builds a policy — including a negative typo,
+    # which must reach make_plan's non-negative validation (PlanError),
+    # not be silently dropped here.
+    stop = (StopPolicy(rtol=args.rtol, atol=args.atol, min_it=args.min_it)
+            if (args.rtol != 0 or args.atol != 0) else None)
     return ExecutionConfig(backend=args.backend, interpret=interpret,
-                           tile=args.tile, mesh=mesh, **extra)
+                           tile=args.tile, mesh=mesh, stop=stop, **extra)
 
 
 def main(argv=None):
@@ -98,7 +113,8 @@ def main(argv=None):
     print(f"integrand={ig.name} dim={ig.dim} config={args.config} "
           f"[{execution.describe()}]")
     print(f"  result  = {res.mean:.8g} +- {res.sdev:.3g} "
-          f"(chi2/dof {res.chi2_dof:.2f}, {res.n_it} iterations)")
+          f"(chi2/dof {res.chi2_dof:.2f}, {res.n_it} combined, "
+          f"{res.n_it_used}/{args.iters} iterations executed)")
     if ig.target is not None:
         pull = (res.mean - ig.target) / max(res.sdev, 1e-30)
         print(f"  target  = {ig.target:.8g}  pull = {pull:+.2f} sigma")

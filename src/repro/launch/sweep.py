@@ -9,7 +9,10 @@ through the unified execution engine.  ``--shard`` composes the batch axis
 with the mesh axis — B scenarios × D local devices as ONE jitted program
 (the sharded batched path, DESIGN.md §9.3); ``--compare-serial`` also times
 the B-serial-runs baseline and reports per-scenario agreement; ``--cache``
-warm-starts the importance maps from (and refreshes) an on-disk map cache.
+warm-starts the importance maps from (and refreshes) an on-disk map cache;
+``--rtol``/``--atol`` set a per-scenario convergence target — converged
+scenarios stop adapting (masked while_loop iterations, §10) and the sweep
+reports the scenario-iterations saved.
 """
 
 from __future__ import annotations
@@ -65,13 +68,18 @@ def main(argv=None):
     for b in range(res.batch_size):
         p = params[b] if params.ndim == 1 else params[b].tolist()
         line = (f"  [{b}] param={p}  {res.mean[b]:.8g} +- {res.sdev[b]:.3g} "
-                f"(chi2/dof {res.chi2_dof[b]:.2f})")
+                f"(chi2/dof {res.chi2_dof[b]:.2f}, "
+                f"it {res.n_it_used[b]}/{args.iters})")
         if family.targets is not None:
             pull = (res.mean[b] - family.targets[b]) / max(res.sdev[b], 1e-30)
             line += f"  target={family.targets[b]:.8g} pull={pull:+.2f}"
         print(line)
     print(f"  batched wall = {dt_batch:.2f}s "
           f"({args.neval * args.iters * res.batch_size / dt_batch:,.0f} evals/s)")
+    saved = args.iters * res.batch_size - int(res.n_it_used.sum())
+    if saved:
+        print(f"  early stop saved {saved} of {args.iters * res.batch_size} "
+              f"scenario-iterations (per-scenario stop masks)")
 
     if args.compare_serial:
         t0 = time.perf_counter()

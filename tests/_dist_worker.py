@@ -168,6 +168,48 @@ def main():
             raise AssertionError(f"PlanError expected for {bad}")
     print("CHECK engine_plan_validation OK")
 
+    # --- 7) early stopping under sharding (ISSUE 5, DESIGN.md §10) --------
+    # The sharded batched while_loop pmin-agrees its continue decision over
+    # the mesh (make_stop_sync): per-scenario n_it_used on 8 devices must
+    # equal the unsharded batched run's exactly, and every shard returns
+    # the same replicated answer (shard_map out_specs enforce it).  The
+    # family mixes per-scenario Gaussian WIDTHS so the trip counts are
+    # heterogeneous — some lanes converge and mask off while others run to
+    # max_it — which is the only regime where the per-lane mask semantics
+    # and the cross-shard agreement actually carry weight.
+    import math as _math
+
+    from repro.batch.family import IntegrandFamily
+
+    def _hetero(sigmas, dim=2, mu=0.5):
+        def fn(sigma, x):
+            norm = (2.0 * _math.pi * sigma**2) ** (-dim / 2.0)
+            return norm * jax.numpy.exp(
+                -jax.numpy.sum((x - mu) ** 2, axis=-1) / (2.0 * sigma**2))
+        return IntegrandFamily("hetero", dim, fn, (0.0,) * dim,
+                               (1.0,) * dim,
+                               jax.numpy.asarray(sigmas, jax.numpy.float32))
+
+    fam_h = _hetero([0.4, 0.25, 0.05, 0.003])
+    cfg_h = I.VegasConfig(neval=16_000, max_it=8, skip=2, ninc=32,
+                          chunk=2048)
+    stopex = E.StopPolicy(rtol=2e-4, min_it=3)
+    ex_stop8 = E.ExecutionConfig(mesh=mesh8, shard_axes=("data",),
+                                 stop=stopex)
+    res8 = E.execute(E.make_plan(fam_h, cfg_h, execution=ex_stop8),
+                     key=jax.random.PRNGKey(42))
+    res1 = E.execute(E.make_plan(fam_h, cfg_h,
+                                 execution=E.ExecutionConfig(stop=stopex)),
+                     key=jax.random.PRNGKey(42))
+    assert np.array_equal(res8.n_it_used, res1.n_it_used), \
+        (res8.n_it_used, res1.n_it_used)
+    # heterogeneous by construction: the check is vacuous unless some lanes
+    # stopped early AND some ran the full loop
+    assert res8.n_it_used.min() < cfg_h.max_it <= res8.n_it_used.max(), \
+        res8.n_it_used
+    np.testing.assert_allclose(res8.mean, res1.mean, rtol=5e-5)
+    print(f"CHECK sharded_early_stop OK n_it_used={res8.n_it_used.tolist()}")
+
     print("ALL_OK")
 
 

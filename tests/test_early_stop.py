@@ -1,0 +1,312 @@
+"""Adaptive early stopping regressions (ISSUE 5, DESIGN.md §10).
+
+The stop-policy while_loop must be the SAME program as the fixed fori_loop,
+just shorter: its executed prefix is bitwise identical to the fixed run,
+the stop respects ``min_it``, the vmapped per-scenario masks reproduce the
+serial per-scenario trip counts exactly, resume re-derives the running stop
+statistics from the carried results buffer, and `combine_results` ignores
+the ``sigma2 = inf`` sentinels of never-executed iterations for every
+``n_done < max_it``.
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.engine as E
+from repro.batch import run_batch, run_serial
+from repro.batch.family import IntegrandFamily
+from repro.core import VegasConfig, run
+from repro.core import integrands as igs
+from repro.core import integrator as core
+
+KEY = jax.random.PRNGKey(21)
+KW = dict(neval=12_000, max_it=10, skip=2, ninc=32, chunk=4096)
+
+
+def _stop_cfg(rtol=0.0, atol=0.0, min_it=2, **kw):
+    return VegasConfig(execution=E.ExecutionConfig(
+        stop=E.StopPolicy(rtol=rtol, atol=atol, min_it=min_it)), **(KW | kw))
+
+
+def make_hetero_gaussian(sigmas, dim=2, mu=0.5) -> IntegrandFamily:
+    """Product Gaussians of per-scenario WIDTH: broad scenarios converge in
+    a couple of iterations, sharp ones keep adapting — the heterogeneity
+    the per-scenario stop masks exist for."""
+    sigmas = np.asarray(sigmas, np.float64)
+
+    def fn(sigma, x):
+        norm = (2.0 * math.pi * sigma**2) ** (-dim / 2.0)
+        return norm * jnp.exp(
+            -jnp.sum((x - mu) ** 2, axis=-1) / (2.0 * sigma**2))
+
+    targets = np.array([
+        (math.erf((1.0 - mu) / (s * math.sqrt(2.0))) / 2.0
+         + math.erf(mu / (s * math.sqrt(2.0))) / 2.0) ** dim
+        for s in sigmas])
+    return IntegrandFamily("hetero_gaussian", dim, fn, (0.0,) * dim,
+                           (1.0,) * dim, jnp.asarray(sigmas, jnp.float32),
+                           targets)
+
+
+# --- single scenario ---------------------------------------------------------
+
+def test_while_loop_prefix_is_bitwise_fixed_loop():
+    """A loose-rtol run stops mid-loop, and everything it DID execute is
+    bit-identical to the fixed-length run: the results prefix, and the
+    full state of a fixed run truncated at exactly n_it_used."""
+    ig = igs.make_cosine(dim=3)
+    r_stop = run(ig, _stop_cfg(rtol=0.02), key=KEY)
+    n = r_stop.n_it_used
+    assert 2 <= n < KW["max_it"], r_stop
+    assert int(r_stop.state.it) == n
+
+    r_fixed = run(ig, VegasConfig(**KW), key=KEY)
+    assert r_fixed.n_it_used == KW["max_it"]
+    np.testing.assert_array_equal(np.asarray(r_stop.state.results[:n]),
+                                  np.asarray(r_fixed.state.results[:n]))
+    # slots past n keep the init sentinels: never executed, not zeroed
+    np.testing.assert_array_equal(
+        np.asarray(r_stop.state.results[n:, 1]),
+        np.full(KW["max_it"] - n, np.inf, np.float32))
+
+    r_trunc = run(ig, VegasConfig(**{**KW, "max_it": n}), key=KEY)
+    np.testing.assert_array_equal(np.asarray(r_stop.state.edges),
+                                  np.asarray(r_trunc.state.edges))
+    np.testing.assert_array_equal(np.asarray(r_stop.state.n_h),
+                                  np.asarray(r_trunc.state.n_h))
+    assert r_stop.mean == r_trunc.mean and r_stop.sdev == r_trunc.sdev
+
+
+def test_stop_never_triggers_before_min_it():
+    ig = igs.make_cosine(dim=2)
+    # rtol so loose the very first combined estimate satisfies it
+    r = run(ig, _stop_cfg(rtol=0.9, min_it=5, skip=0), key=KEY)
+    assert r.n_it_used == 5, r
+    # and never before skip+1 regardless of min_it: the combined sdev is
+    # inf while no iteration entered the combination
+    r2 = run(ig, _stop_cfg(rtol=0.9, min_it=2, skip=6), key=KEY)
+    assert r2.n_it_used == 7, r2
+
+
+def test_inert_policy_is_the_fixed_loop():
+    ig = igs.make_cosine(dim=2)
+    plan = E.make_plan(ig, _stop_cfg(rtol=0.0, atol=0.0))
+    assert plan.stop is None
+    r = run(ig, _stop_cfg(rtol=0.0), key=KEY)
+    assert r.n_it_used == KW["max_it"]
+    assert r.mean == run(ig, VegasConfig(**KW), key=KEY).mean
+
+
+def test_atol_stop_criterion():
+    """atol is an absolute sdev target: combines as max(rtol|mean|, atol)."""
+    ig = igs.make_cosine(dim=3)
+    fixed = run(ig, VegasConfig(**KW), key=KEY)
+    # an atol between the 3rd and final combined sdev stops mid-run
+    atol = float(fixed.sdev) * 3.0
+    r = run(ig, _stop_cfg(atol=atol, min_it=2), key=KEY)
+    assert 2 <= r.n_it_used < KW["max_it"], r
+    assert r.sdev <= atol
+
+
+# --- batched per-scenario masks ----------------------------------------------
+
+SIGMAS = [0.4, 0.25, 0.05, 0.003]
+STOP = E.StopPolicy(rtol=2e-4, min_it=3)
+BKEY = jax.random.PRNGKey(11)
+BKW = dict(neval=8_000, max_it=8, skip=2, ninc=32, chunk=2048)
+
+
+def test_batched_stop_masks_match_serial_exactly():
+    """ISSUE 5 acceptance: a B=4 family under a loose rtol executes fewer
+    effective iterations than max_it for some scenarios (per-scenario
+    n_it_used), stragglers run the full loop, and the vmapped mask
+    semantics reproduce the serial per-scenario trip counts EXACTLY."""
+    fam = make_hetero_gaussian(SIGMAS)
+    cfg = VegasConfig(execution=E.ExecutionConfig(stop=STOP), **BKW)
+    batched = run_batch(fam, cfg, key=BKEY)
+    serial = run_serial(fam, cfg, key=BKEY)
+
+    np.testing.assert_array_equal(batched.n_it_used,
+                                  [r.n_it_used for r in serial])
+    assert batched.n_it_used.min() < BKW["max_it"], batched.n_it_used
+    assert batched.n_it_used.max() == BKW["max_it"], batched.n_it_used
+    # heterogeneous by construction: broad scenarios stop first
+    assert (np.diff(batched.n_it_used) >= 0).all(), batched.n_it_used
+    # estimates stay correct for every scenario, stopped or not
+    pulls = (batched.mean - fam.targets) / batched.sdev
+    assert (np.abs(pulls) < 5).all(), pulls
+
+
+def test_batched_non_stopped_scenarios_match_fixed_loop_bitwise():
+    """Scenarios whose mask never triggered ran the identical program as
+    the fixed loop — bitwise, per ISSUE 5 ('matching the fixed-loop
+    estimates for scenarios that don't stop'); stopped scenarios match on
+    their executed prefix."""
+    fam = make_hetero_gaussian(SIGMAS)
+    cfg = VegasConfig(execution=E.ExecutionConfig(stop=STOP), **BKW)
+    stopped = run_batch(fam, cfg, key=BKEY)
+    fixed = run_batch(fam, VegasConfig(**BKW), key=BKEY)
+
+    for b in range(len(SIGMAS)):
+        n = int(stopped.n_it_used[b])
+        np.testing.assert_array_equal(
+            np.asarray(stopped.states.results[b][:n]),
+            np.asarray(fixed.states.results[b][:n]), err_msg=f"scenario {b}")
+        if n == BKW["max_it"]:
+            assert stopped.mean[b] == fixed.mean[b], b
+            np.testing.assert_array_equal(
+                np.asarray(stopped.states.edges[b]),
+                np.asarray(fixed.states.edges[b]), err_msg=f"scenario {b}")
+
+
+def test_batched_stop_is_deterministic():
+    fam = make_hetero_gaussian(SIGMAS)
+    cfg = VegasConfig(execution=E.ExecutionConfig(stop=STOP), **BKW)
+    r1 = run_batch(fam, cfg, key=BKEY)
+    r2 = run_batch(fam, cfg, key=BKEY)
+    np.testing.assert_array_equal(r1.n_it_used, r2.n_it_used)
+    np.testing.assert_array_equal(r1.mean, r2.mean)
+
+
+# --- resume ------------------------------------------------------------------
+
+def test_resume_from_checkpoint_preserves_stop_statistics():
+    """Checkpoint a FIXED run early (stop + checkpoint is a PlanError, the
+    supported flow is checkpoint-then-resume-under-stop), then resume with
+    the stop policy: the running stop statistics are a pure function of the
+    carried results buffer, so the resumed run must stop at the same
+    iteration with the same answer as the never-interrupted stop run."""
+    ig = igs.make_cosine(dim=3)
+    scratch = run(ig, _stop_cfg(rtol=1e-4, min_it=2), key=KEY)
+    assert 3 < scratch.n_it_used < KW["max_it"], scratch
+
+    saved = {}
+    run(ig, VegasConfig(**{**KW, "max_it": 3}), key=KEY,
+        checkpoint_cb=lambda it, s: saved.__setitem__("state", s))
+    resumed = run(ig, _stop_cfg(rtol=1e-4, min_it=2), key=KEY,
+                  state=saved["state"])
+    assert resumed.n_it_used == scratch.n_it_used
+    assert resumed.mean == pytest.approx(scratch.mean, rel=1e-6)
+    assert resumed.sdev == pytest.approx(scratch.sdev, rel=1e-6)
+
+
+def test_resume_already_converged_runs_zero_iterations():
+    ig = igs.make_cosine(dim=3)
+    done = run(ig, _stop_cfg(rtol=1e-4), key=KEY)
+    again = run(ig, _stop_cfg(rtol=1e-4), key=KEY, state=done.state)
+    assert again.n_it_used == done.n_it_used  # no extra iterations ran
+    assert again.mean == done.mean
+
+
+# --- plan validation + executor guards ---------------------------------------
+
+def test_plan_rejects_stop_with_checkpoint():
+    ig = igs.make_cosine(dim=2)
+    ex = E.ExecutionConfig(stop=E.StopPolicy(rtol=0.01),
+                           checkpoint=E.CheckpointPolicy(directory="/tmp/x"))
+    with pytest.raises(E.PlanError, match="stop \\+ checkpoint"):
+        E.make_plan(ig, VegasConfig(**KW), execution=ex)
+
+
+def test_plan_rejects_negative_and_unreachable_stop():
+    ig = igs.make_cosine(dim=2)
+    with pytest.raises(E.PlanError, match="non-negative"):
+        E.make_plan(ig, VegasConfig(**KW),
+                    execution=E.ExecutionConfig(stop=E.StopPolicy(rtol=-1.0)))
+    with pytest.raises(E.PlanError, match="min_it"):
+        E.make_plan(ig, VegasConfig(**KW), execution=E.ExecutionConfig(
+            stop=E.StopPolicy(rtol=0.01, min_it=KW["max_it"])))
+
+
+def test_plan_rejects_stop_on_backend_without_capability():
+    from repro.engine import backends as B
+    ig = igs.make_cosine(dim=2)
+    ref = B.get("ref")
+    B.register(dataclasses.replace(
+        ref, name="nostop",
+        capabilities=ref.capabilities - {B.EARLY_STOP}))
+    try:
+        with pytest.raises(E.PlanError, match="early-stop"):
+            E.make_plan(ig, VegasConfig(**KW), execution=E.ExecutionConfig(
+                backend="nostop", stop=E.StopPolicy(rtol=0.01)))
+    finally:
+        del B._REGISTRY["nostop"]
+
+
+def test_executor_rejects_legacy_checkpoint_cb_with_stop():
+    ig = igs.make_cosine(dim=2)
+    with pytest.raises(ValueError, match="checkpoint_cb"):
+        run(ig, _stop_cfg(rtol=0.01), key=KEY,
+            checkpoint_cb=lambda it, s: None)
+
+
+def test_plan_describe_names_the_stop_axis():
+    ig = igs.make_cosine(dim=2)
+    plan = E.make_plan(ig, _stop_cfg(rtol=0.01, atol=1e-6, min_it=3))
+    text = plan.describe()
+    assert "while_loop" in text and "rtol=0.01" in text
+    assert "stop[" in _stop_cfg(rtol=0.01).execution.describe()
+
+
+# --- combine_results sentinel contract (ISSUE 5 satellite) -------------------
+
+def _manual_combine(rows, skip, n_done):
+    use = [i for i in range(len(rows))
+           if skip <= i < n_done and np.isfinite(rows[i][1]) and rows[i][1] > 0]
+    if not use:
+        return 0.0, np.inf, 0.0, 0
+    wts = {i: 1.0 / rows[i][1] for i in use}
+    wsum = sum(wts.values())
+    mean = sum(wts[i] * rows[i][0] for i in use) / wsum
+    chi2 = sum(wts[i] * (rows[i][0] - mean) ** 2 for i in use)
+    return mean, math.sqrt(1.0 / wsum), chi2 / max(len(use) - 1, 1), len(use)
+
+
+def test_combine_results_ignores_inf_sentinels_for_every_n_done():
+    """The fixed-shape buffer contract: for EVERY n_done < max_it the
+    summary stats must ignore the unfilled (0, inf) sentinel slots — both
+    through the isfinite guard and the idx < n_done mask."""
+    max_it, skip = 8, 2
+    rng = np.random.default_rng(3)
+    rows = np.stack([rng.normal(1.0, 0.01, max_it).astype(np.float32),
+                     rng.uniform(1e-4, 2e-4, max_it).astype(np.float32)], 1)
+    for n_done in range(max_it + 1):
+        buf = rows.copy()
+        buf[n_done:, 0] = 0.0
+        buf[n_done:, 1] = np.inf          # the init_state sentinel
+        got = core.combine_results(jnp.asarray(buf), skip, n_done)
+        want = _manual_combine(rows.tolist(), skip, n_done)
+        for g, w in zip(got, want):
+            assert float(g) == pytest.approx(w, rel=1e-5, abs=1e-12), (
+                n_done, got, want)
+
+
+def test_combine_results_masks_finite_garbage_past_n_done():
+    """Even FINITE garbage past n_done must not leak in: the idx < n_done
+    mask is load-bearing on its own, not just via the inf sentinels."""
+    max_it, skip, n_done = 6, 1, 4
+    rng = np.random.default_rng(5)
+    rows = np.stack([rng.normal(1.0, 0.01, max_it).astype(np.float32),
+                     rng.uniform(1e-4, 2e-4, max_it).astype(np.float32)], 1)
+    garbage = rows.copy()
+    garbage[n_done:] = [[777.0, 1e-9]] * (max_it - n_done)  # huge weight
+    got = core.combine_results(jnp.asarray(garbage), skip, n_done)
+    clean = core.combine_results(jnp.asarray(rows), skip, n_done)
+    for g, c in zip(got, clean):
+        assert float(g) == float(c), (got, clean)
+
+
+def test_vegas_result_prefix_fields_exclude_sentinels():
+    """RunResult consumers: iter_means/iter_sdevs are sliced to n_it_used,
+    so no inf sentinel reaches the user-facing arrays of a stopped run."""
+    ig = igs.make_cosine(dim=3)
+    r = run(ig, _stop_cfg(rtol=0.02), key=KEY)
+    assert r.iter_means.shape == (r.n_it_used,)
+    assert r.iter_sdevs.shape == (r.n_it_used,)
+    assert np.isfinite(np.asarray(r.iter_sdevs)).all()
+    assert np.isfinite(r.mean) and np.isfinite(r.sdev)
