@@ -1,0 +1,91 @@
+"""Grad-vs-primal overhead: what a differentiable run costs over a plain
+one (§11).
+
+Rows land in BENCH_run.json (the ``run/`` prefix) so the grad overhead
+rides the same end-to-end trajectory artifact as the backend timings:
+
+  * ``run/grad/<name>/primal``  — the plain two-phase-free `core.run`;
+  * ``run/grad/<name>/value``   — the two-phase program, value only
+    (adapt + frozen-map eval, no differentiation);
+  * ``run/grad/<name>/grad``    — jax.grad of the full run (the vjp adds
+    one reverse pass through the reference eval formulation);
+  * ``run/grad/greeks/batch``   — the vmapped family Greeks program
+    (per-scenario vjp + with_sdev derivative-integrand passes).
+
+The derived column records the overhead ratio against the primal row.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.batch.family import make_asian_greeks_family
+from repro.core import VegasConfig
+from repro.core.integrands import Integrand
+from repro.engine import ExecutionConfig, GradPolicy, execute, make_plan
+from repro.grad import differentiable
+
+from .common import emit, timeit
+
+
+def run(fast=True):
+    neval = 20_000 if fast else 200_000
+    max_it = 6 if fast else 12
+    cfg = VegasConfig(neval=neval, max_it=max_it, skip=2, ninc=128,
+                      chunk=min(neval, 1 << 14))
+    key = jax.random.PRNGKey(0)
+    dim, sigma = 3, 0.2
+    norm = 1.0 / (2.0 * math.pi * sigma**2) ** (dim / 2.0)
+
+    def fn(mu, x):
+        return norm * jnp.exp(-jnp.sum((x - mu) ** 2, -1)
+                              / (2.0 * sigma**2))
+
+    ig = Integrand("gaussian", dim, lambda x: fn(0.5, x),
+                   (0.0,) * dim, (1.0,) * dim)
+    # The primal yardstick: the plain adapt loop + combination as ONE
+    # jitted program (same dispatch regime as the jitted grad programs —
+    # core.run's host-side result assembly would skew the ratio).
+    from repro.core import integrator as core
+    rcfg = cfg.resolve(dim)
+
+    @jax.jit
+    def primal(k):
+        st = core.run_loop(core.init_state(ig, rcfg, k), ig, rcfg, 0)
+        return core.combine_results(st.results, rcfg.skip, st.it)[:2]
+
+    t_primal = timeit(lambda: primal(key), repeats=3, warmup=1)
+    emit("run/grad/gaussian/primal", t_primal,
+         f"evals_per_s={neval * max_it / t_primal:,.0f}",
+         n_eval=neval, backend="ref", max_it=max_it)
+
+    est = differentiable(fn, dim, (0.0,) * dim, (1.0,) * dim, cfg)
+    mu0 = jnp.float32(0.5)
+    value = jax.jit(lambda m, k: est(m, k))
+    t_value = timeit(lambda: value(mu0, key), repeats=3, warmup=1)
+    emit("run/grad/gaussian/value", t_value,
+         f"x{t_value / t_primal:.2f} vs primal",
+         n_eval=neval, backend="ref", max_it=max_it)
+
+    gradf = jax.jit(jax.grad(lambda m, k: est(m, k)))
+    t_grad = timeit(lambda: gradf(mu0, key), repeats=3, warmup=1)
+    emit("run/grad/gaussian/grad", t_grad,
+         f"x{t_grad / t_primal:.2f} vs primal",
+         n_eval=neval, backend="ref", max_it=max_it)
+
+    # The family Greeks program: B scenarios, 2 params each, with_sdev.
+    b = 4 if fast else 8
+    fam = make_asian_greeks_family(np.linspace(90.0, 110.0, b),
+                                   n_steps=4 if fast else 8)
+    gcfg = VegasConfig(neval=neval, max_it=max_it, ninc=128,
+                       chunk=min(neval, 1 << 14),
+                       execution=ExecutionConfig(grad=GradPolicy()))
+    plan = make_plan(fam, gcfg)
+    t_batch = timeit(lambda: execute(plan, key=key), repeats=3, warmup=1)
+    emit("run/grad/greeks/batch", t_batch,
+         f"B={b} scenario_grads_per_s={b / t_batch:,.1f}",
+         n_eval=neval, backend="ref", max_it=max_it)

@@ -72,8 +72,8 @@ def main() -> None:
     only = set(filter(None, args.only.split(",")))
 
     from . import (bench_applications, bench_batch, bench_breakdown,
-                   bench_integrands, bench_multidevice, bench_runs,
-                   bench_scaling, bench_stratification)
+                   bench_grad, bench_integrands, bench_multidevice,
+                   bench_runs, bench_scaling, bench_stratification)
     from . import common
 
     suites = {
@@ -85,6 +85,7 @@ def main() -> None:
         "table9_10": bench_applications,
         "batch": bench_batch,
         "run": bench_runs,
+        "grad": bench_grad,
     }
     common.reset_rows()
     print("name,us_per_call,derived")

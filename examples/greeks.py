@@ -1,0 +1,52 @@
+"""Greeks from the differentiable engine: one vjp per scenario (§11).
+
+  PYTHONPATH=src python examples/greeks.py
+
+Prices a geometric Asian call at 5 (strike, sigma) scenarios AND
+differentiates each price w.r.t. both contract parameters — the dual delta
+``d(price)/d(strike)`` and the vega ``d(price)/d(sigma)`` — in one vmapped
+two-phase program: adapt with gradients stopped, then a frozen-map
+evaluation pass whose pathwise Monte Carlo gradient is exact.  Each
+gradient comes with its own error bar (the derivative integrand is itself
+a VEGAS integral), checked here against finite differences of the exact
+closed-form price curve.
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.batch.family import make_asian_greeks_family
+from repro.core import VegasConfig
+from repro.core.targets import asian_geometric_closed_form as exact_price
+from repro.engine import ExecutionConfig, GradPolicy, execute, make_plan
+
+strikes = np.linspace(90.0, 110.0, 5)
+sigmas = np.full(5, 0.2)
+family = make_asian_greeks_family(strikes, sigmas, n_steps=8)
+cfg = VegasConfig(neval=50_000, max_it=10, ninc=128,
+                  execution=ExecutionConfig(grad=GradPolicy()))
+
+plan = make_plan(family, cfg)
+print(plan.describe(), "\n")
+
+t0 = time.perf_counter()
+res = execute(plan, key=jax.random.PRNGKey(0))
+print(f"grad sweep: {time.perf_counter() - t0:.2f}s "
+      f"(B={res.batch_size}, mode={res.mode})\n")
+
+kw = dict(s0=100.0, r=0.1, t_mat=1.0, n=8)
+print("  K     price (MC +- sd)      dP/dK (MC +- sd)   exact-FD   "
+      "dP/dsig (MC +- sd)  exact-FD")
+for b, (k, sig) in enumerate(zip(strikes, sigmas)):
+    # Finite differences of the CLOSED FORM — an exact yardstick, no MC.
+    fd_k = (exact_price(strike=k + 0.5, sigma=sig, **kw)
+            - exact_price(strike=k - 0.5, sigma=sig, **kw))
+    fd_s = (exact_price(strike=k, sigma=sig + 5e-3, **kw)
+            - exact_price(strike=k, sigma=sig - 5e-3, **kw)) / 1e-2
+    print(f"  {k:5.1f} {res.mean[b]:8.4f} +- {res.sdev[b]:.2g}   "
+          f"{res.grad['strike'][b]:+8.4f} +- {res.grad_sdev['strike'][b]:.2g}"
+          f"  {fd_k:+8.4f}  "
+          f"{res.grad['sigma'][b]:+8.3f} +- {res.grad_sdev['sigma'][b]:.2g}"
+          f"  {fd_s:+8.3f}")

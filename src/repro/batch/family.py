@@ -108,6 +108,49 @@ def make_asian_family(strikes, n_steps: int = 8, s0: float = 100.0,
                            jnp.asarray(strikes, jnp.float32), targets)
 
 
+def make_asian_greeks_family(strikes, sigmas=None, n_steps: int = 8,
+                             s0: float = 100.0, r: float = 0.1,
+                             t_mat: float = 1.0) -> IntegrandFamily:
+    """Geometric Asian call with per-scenario ``{'strike', 'sigma'}`` params
+    — the Greeks workload of the differentiable engine (`repro.grad`, §11).
+
+    Where `make_asian_family` bakes the volatility into the closure (a
+    static float the tracer never sees), here BOTH contract parameters ride
+    the params pytree, so ``d(price)/d(strike)`` (dual delta) and
+    ``d(price)/d(sigma)`` (vega) flow out of one vjp per scenario.  The
+    drift/vol path coefficients are recomputed from the traced ``sigma``
+    inside ``fn`` — that dependence IS the vega path.  Targets stay the
+    geometric closed form, so grad tests can finite-difference an exact
+    price curve rather than another Monte Carlo estimate.
+    """
+    strikes = np.asarray(strikes, np.float64)
+    sigmas = (np.full_like(strikes, 0.2) if sigmas is None
+              else np.broadcast_to(np.asarray(sigmas, np.float64),
+                                   strikes.shape))
+    dt = t_mat / n_steps
+
+    def fn(params, x):
+        strike, sigma = params["strike"], params["sigma"]
+        drift = (r - 0.5 * sigma**2) * dt
+        vol = sigma * math.sqrt(dt)
+        eps = 1e-6 if x.dtype == jnp.float32 else 1e-12
+        xc = jnp.clip(x, eps, 1.0 - eps)
+        z = jax.scipy.special.erfinv(2.0 * xc - 1.0) * math.sqrt(2.0)
+        logpath = jnp.cumsum(drift + vol * z, axis=-1)
+        avg = s0 * jnp.exp(jnp.mean(logpath, axis=-1))
+        return math.exp(-r * t_mat) * jnp.maximum(avg - strike, 0.0)
+
+    from repro.core.targets import asian_geometric_closed_form
+    targets = np.array([asian_geometric_closed_form(s0, k, r, sig, t_mat,
+                                                    n_steps)
+                        for k, sig in zip(strikes, sigmas)])
+    params = {"strike": jnp.asarray(strikes, jnp.float32),
+              "sigma": jnp.asarray(sigmas, jnp.float32)}
+    return IntegrandFamily("asian_greeks_family", n_steps, fn,
+                           (0.0,) * n_steps, (1.0,) * n_steps, params,
+                           targets)
+
+
 def make_ridge_family(directions, dim: int = 4, n_peaks: int = 50) -> IntegrandFamily:
     """Ridge integrand (Table 3 #8) with per-scenario peak-line orientation.
 
@@ -142,6 +185,8 @@ def make_ridge_family(directions, dim: int = 4, n_peaks: int = 50) -> IntegrandF
 FAMILIES = {
     "gaussian": lambda b: make_gaussian_family(np.linspace(0.2, 0.8, b)),
     "asian": lambda b: make_asian_family(np.linspace(80.0, 120.0, b)),
+    "asian_greeks": lambda b: make_asian_greeks_family(
+        np.linspace(80.0, 120.0, b), np.linspace(0.15, 0.3, b)),
     "ridge": lambda b: make_ridge_family(
         0.5 + 0.5 * (np.arange(b)[:, None] * np.arange(1, 5)[None, :] % 7) / 7.0),
 }

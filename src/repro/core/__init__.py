@@ -2,4 +2,4 @@
 
 from .integrands import Integrand, table3_suite  # noqa: F401
 from .integrator import (VegasConfig, VegasResult, VegasState,  # noqa: F401
-                         run, run_loop)
+                         adapt_loop, eval_phase, run, run_loop)

@@ -222,6 +222,17 @@ def combine_results(results: jax.Array, skip: int, n_done: int):
     Degenerate case: when no iteration is usable (every sig2 is inf or
     non-finite, so ``wsum == 0``) the result is the NaN-free sentinel
     ``(0.0, inf, 0.0, 0)`` — zero information, not a silent NaN.
+
+    Differentiation contract (§11): every consumer that differentiates
+    through this function (the grad module's running-stat paths, user code
+    taking ``jax.grad`` of a combined estimate) relies on the double-where
+    idiom below: each ``1/x`` whose operand can be the 0-or-inf sentinel is
+    guarded INSIDE its selecting ``where``, so the unused branch never
+    produces the ``0 * inf = NaN`` that reverse-mode would otherwise
+    propagate into the gradients of early-stopped runs (whose results
+    buffer keeps ``(0.0, inf)`` sentinel rows past ``n_done``).
+    tests/test_grad.py::test_combine_results_grad_nan_safe is the
+    regression.
     """
     means, sig2 = results[:, 0], results[:, 1]
     idx = jnp.arange(results.shape[0])
@@ -231,7 +242,10 @@ def combine_results(results: jax.Array, skip: int, n_done: int):
     any_used = wsum > 0
     mean = jnp.where(any_used,
                      jnp.sum(wts * means) / jnp.where(any_used, wsum, 1.0), 0.0)
-    var = 1.0 / wsum  # inf when nothing was usable (nan-free)
+    # inf when nothing was usable — via the guarded branch, NOT a bare
+    # 1/wsum: d(1/wsum) at wsum=0 is -inf, and inf * the zero cotangent of
+    # the unselected branch would NaN-poison grads of early-stopped runs.
+    var = jnp.where(any_used, 1.0 / jnp.where(any_used, wsum, 1.0), jnp.inf)
     n_used = jnp.sum(use)
     chi2 = jnp.sum(jnp.where(use, wts * (means - mean) ** 2, 0.0))
     chi2_dof = jnp.where(any_used, chi2 / jnp.maximum(n_used - 1, 1), 0.0)
@@ -241,7 +255,7 @@ def combine_results(results: jax.Array, skip: int, n_done: int):
 def run_loop(state: VegasState, integrand: Integrand, cfg: ResolvedConfig,
              start: int, fill_fn=None, *, stop=None,
              stop_sync=None) -> VegasState:
-    """The whole iteration loop as one traced program.
+    """The ADAPT phase: the whole iteration loop as one traced program.
 
     Fixed-length mode (no active stop policy): ``lax.fori_loop`` over
     :func:`iteration_step` from ``start`` to ``cfg.max_it``.  This is the
@@ -305,6 +319,46 @@ def run_loop(state: VegasState, integrand: Integrand, cfg: ResolvedConfig,
     carry = (state, stats0, wants_more(state, stats0))
     state, _, _ = jax.lax.while_loop(lambda c: c[2], body, carry)
     return state
+
+
+#: The two-phase split (§11): ``adapt_loop`` is `run_loop` under its phase
+#: name — the part of a differentiable run that executes with gradients
+#: stopped — and :func:`eval_phase` is the frozen-map pass whose pathwise
+#: gradient is exact Monte Carlo.
+adapt_loop = run_loop
+
+
+def eval_key(key, cfg: ResolvedConfig):
+    """RNG key of the frozen-map evaluation pass: ``fold_in(key, max_it)``.
+
+    Adapt iterations consume ``fold_in(key, it)`` for ``it < max_it``
+    (`iteration_step`), so the ``max_it`` slot is never drawn by the adapt
+    phase — the eval pass gets a deterministic stream independent of every
+    adapt iteration, whether or not a StopPolicy truncated the loop.
+    """
+    return jax.random.fold_in(key, cfg.max_it)
+
+
+def eval_phase(edges, n_h, integrand: Integrand, cfg: ResolvedConfig, key,
+               fill_fn=None):
+    """The EVAL phase of a two-phase run (§11): one fill over a FROZEN map.
+
+    ``edges``/``n_h`` are the converged (and, in a differentiable run,
+    ``stop_gradient``-frozen) map and stratification; the pass neither
+    adapts nor touches the results buffer.  Returns the pass's
+    ``(estimate, sigma2)`` from :func:`fill.estimate_from_cubes` — for a
+    fixed map this is an unbiased estimate of the integral whatever the
+    map, which is exactly why the adapt phase's parameter-dependence can be
+    dropped from the gradient (DESIGN.md §11).  Pure jnp when ``fill_fn``
+    binds the ``ref`` backend, hence differentiable w.r.t. anything the
+    integrand or ``edges`` carry (`repro.grad` builds on this).
+    """
+    if fill_fn is None:
+        from repro.engine import backends as _backends
+        fill_fn = _backends.bind_fill(cfg)
+    res = fill_fn(edges, n_h, key, integrand)
+    i_ev, sigma2_ev, _ = fill_mod.estimate_from_cubes(res, n_h)
+    return i_ev, sigma2_ev
 
 
 def run(integrand: Integrand, cfg: VegasConfig | None = None, *,

@@ -33,8 +33,10 @@ from .backends import (  # noqa: F401
 from .backends import get as get_backend  # noqa: F401
 from .config import (  # noqa: F401
     BATCH_MODES,
+    GRAD_MODES,
     CheckpointPolicy,
     ExecutionConfig,
+    GradPolicy,
     StopPolicy,
 )
 
@@ -49,9 +51,10 @@ _LAZY = {
 
 __all__ = [
     "BATCH_MODES", "BackendSpec", "CAPABILITIES", "CheckpointPolicy",
-    "ExecutionConfig", "Plan", "PlanError", "StopPolicy", "available",
-    "bind_fill", "capability_matrix", "execute", "get_backend", "make_plan",
-    "make_sharded_fill", "make_stop_sync", "register",
+    "ExecutionConfig", "GRAD_MODES", "GradPolicy", "Plan", "PlanError",
+    "StopPolicy", "available", "bind_fill", "capability_matrix", "execute",
+    "get_backend", "make_plan", "make_sharded_fill", "make_stop_sync",
+    "register",
 ]
 
 

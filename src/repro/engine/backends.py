@@ -22,7 +22,21 @@ Capabilities (DESIGN.md §9 capability matrix):
   * ``early-stop``       — traces correctly inside the adaptive
                            ``lax.while_loop`` body (`StopPolicy` runs, §10):
                            no iteration-index specialization, no host
-                           callbacks inside the fill.
+                           callbacks inside the fill;
+  * ``grad-pathwise``    — can anchor the differentiable two-phase run
+                           (`GradPolicy(mode='pathwise')`, §11): the eval
+                           pass's value may come from this backend while the
+                           cotangent is evaluated through the reference
+                           formulation on the SAME chunk-keyed stream (the
+                           bit-exact RNG contract is what makes the pairing
+                           coherent).  ``pallas-fused`` cannot declare it:
+                           with the RNG regenerated inside the kernel and
+                           moments accumulated in VMEM there is no JAX-level
+                           sample path left to pair a VJP against;
+  * ``grad-score``       — supports the score-function gradient fallback
+                           (`GradPolicy(mode='score')`): the surrogate
+                           rewrites the integrand sample-by-sample, which
+                           needs the reference (pure-jnp) eval path.
 """
 
 from __future__ import annotations
@@ -38,9 +52,11 @@ VMAPPABLE = "vmappable"
 IN_KERNEL_RNG = "in-kernel-rng"
 CLOSURE_HOISTING = "closure-hoisting"
 EARLY_STOP = "early-stop"
+GRAD_PATHWISE = "grad-pathwise"
+GRAD_SCORE = "grad-score"
 
 CAPABILITIES = (SHARDABLE, VMAPPABLE, IN_KERNEL_RNG, CLOSURE_HOISTING,
-                EARLY_STOP)
+                EARLY_STOP, GRAD_PATHWISE, GRAD_SCORE)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,7 +141,7 @@ register(BackendSpec(
     name="ref",
     fill=fill_mod.fill_reference,
     capabilities=frozenset({SHARDABLE, VMAPPABLE, CLOSURE_HOISTING,
-                            EARLY_STOP}),
+                            EARLY_STOP, GRAD_PATHWISE, GRAD_SCORE}),
     knobs=(),
     dtypes=("float32", "float64"),
     doc="pure-jnp oracle: scatter-add accumulation, chunked lax.scan",
@@ -135,7 +151,7 @@ register(BackendSpec(
     name="pallas",
     fill=fill_mod.fill_pallas,
     capabilities=frozenset({SHARDABLE, VMAPPABLE, CLOSURE_HOISTING,
-                            EARLY_STOP}),
+                            EARLY_STOP, GRAD_PATHWISE}),
     knobs=("interpret", "tile"),
     fixed={"fused_cubes": False},
     dtypes=("float32",),

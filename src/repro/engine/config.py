@@ -18,7 +18,12 @@ carries the orthogonal execution axes the engine composes
                    iteration (`dist.checkpoint`);
   * **stopping**  — a :class:`StopPolicy` convergence target (rtol/atol/
                    min_it) that turns the fixed ``fori_loop`` into an
-                   adaptive fixed-shape ``lax.while_loop`` (DESIGN.md §10).
+                   adaptive fixed-shape ``lax.while_loop`` (DESIGN.md §10);
+  * **gradients** — a :class:`GradPolicy` that makes the run differentiable
+                   (`repro.grad`, DESIGN.md §11): adapt with gradients
+                   stopped, then a frozen-map evaluation pass whose pathwise
+                   (or score-function) Monte Carlo gradient flows to
+                   integrand parameters and integration bounds.
 
 The split exists so that every run path — single scenario, batched family,
 sharded fill, and their combinations — consumes ONE config object instead of
@@ -35,6 +40,53 @@ LEGACY_EXEC_FIELDS = ("backend", "interpret", "fused_cubes", "tile")
 
 #: Valid values of ExecutionConfig.batch.
 BATCH_MODES = ("auto", "vmap", "serial")
+
+#: Valid values of GradPolicy.mode ("off" normalizes to no policy at plan
+#: time, mirroring the inert-StopPolicy convention).
+GRAD_MODES = ("pathwise", "score", "off")
+
+
+@dataclasses.dataclass(frozen=True)
+class GradPolicy:
+    """Differentiable-integration policy (DESIGN.md §11, `repro.grad`).
+
+    A run under an active policy executes in two phases: the adaptive loop
+    runs with every gradient stopped (map and stratification evolution are
+    ``stop_gradient``-frozen), then ONE frozen-map evaluation pass produces
+    the returned estimate.  For a fixed map the estimator is unbiased
+    whatever the map, so dropping the adaptation's parameter-dependence is
+    unbiased for the frozen-map estimate — and the eval pass's gradient is
+    an exact Monte Carlo estimator of ``dI/dtheta``.
+
+    ``mode`` selects the estimator the backward pass evaluates:
+
+      * ``pathwise`` — the reparameterized gradient ``E[J(y) df/dtheta]``:
+        samples are a fixed function of (frozen map, chunk-keyed uniforms),
+        so differentiating the integrand along each sample path is exact.
+      * ``score``    — the log-derivative form ``E[J f d(log f)/dtheta]``:
+        equal to pathwise wherever ``f > 0`` (``f dlog f = df``) but needing
+        only the score of the integrand — the form available when ``f`` is
+        computed in log-space (Bayesian-evidence workloads); samples with
+        ``f <= 0`` contribute zero gradient.
+      * ``off``      — inert; `make_plan` normalizes the policy to ``None``.
+
+    ``with_sdev`` asks terminal runners (the executor / CLIs) to also
+    estimate each gradient component's own Monte Carlo uncertainty by
+    integrating the derivative integrand through the same frozen-map pass
+    (one extra fill per parameter component).
+    """
+    mode: str = "pathwise"
+    with_sdev: bool = True
+
+    @property
+    def active(self) -> bool:
+        return self.mode != "off"
+
+    def describe(self) -> str:
+        bits = [self.mode]
+        if self.with_sdev:
+            bits.append("with_sdev")
+        return ",".join(bits)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,6 +178,7 @@ class ExecutionConfig:
     shard_axes: tuple[str, ...] | None = None  # mesh axes to shard fill over
     checkpoint: CheckpointPolicy | None = None
     stop: StopPolicy | None = None  # convergence target -> while_loop (§10)
+    grad: GradPolicy | None = None  # differentiable two-phase run (§11)
 
     def with_legacy(self, **flat) -> "ExecutionConfig":
         """Fold the pre-engine flat `VegasConfig` fields (``backend``,
@@ -169,4 +222,6 @@ class ExecutionConfig:
             bits.append("checkpoint=on")
         if self.stop is not None and self.stop.active:
             bits.append(f"stop[{self.stop.describe()}]")
+        if self.grad is not None and self.grad.active:
+            bits.append(f"grad[{self.grad.describe()}]")
         return " ".join(bits)

@@ -59,6 +59,18 @@ def execute(plan: Plan, *, key=None, state: core.VegasState | None = None,
     """
     if key is None:
         key = jax.random.PRNGKey(0)
+    if plan.grad is not None:
+        # §11 route: the two-phase differentiable program (repro.grad).  It
+        # is one traced program per run — none of the imperative hooks
+        # (resume state, warm-start cache, fill/checkpoint overrides)
+        # compose with a custom-AD boundary.
+        if (state is not None or cache is not None or fill_fn is not None
+                or checkpoint_cb is not None):
+            raise ValueError(
+                "a grad plan takes no state/cache/fill_fn/checkpoint_cb "
+                "hooks; drop the GradPolicy or the hook")
+        from repro.grad.api import execute_grad
+        return execute_grad(plan, key)
     if plan.is_family:
         if state is not None:
             raise ValueError("state resume is a single-scenario feature; "

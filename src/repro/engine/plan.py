@@ -21,8 +21,8 @@ from repro.core import integrator as core
 
 from . import backends as backends_mod
 from . import sharding as sharding_mod
-from .config import (BATCH_MODES, CheckpointPolicy, ExecutionConfig,
-                     StopPolicy)
+from .config import (BATCH_MODES, GRAD_MODES, CheckpointPolicy,
+                     ExecutionConfig, GradPolicy, StopPolicy)
 
 
 class PlanError(ValueError):
@@ -44,6 +44,7 @@ class Plan:
     n_shards: int
     checkpoint: CheckpointPolicy | None
     stop: StopPolicy | None             # None, or an ACTIVE policy (§10)
+    grad: GradPolicy | None = None      # None, or an ACTIVE policy (§11)
 
     def describe(self) -> str:
         w = self.workload
@@ -56,6 +57,7 @@ class Plan:
             f"  batching   {'vmap B=' + str(self.batch_size) if self.batched else ('serial B=' + str(self.batch_size) if self.batch_size > 1 else 'single scenario')}",
             f"  sharding   {str(self.n_shards) + ' shards @ ' + ','.join(self.shard_axes) if self.n_shards > 1 else 'none'}",
             f"  loop       {'host (checkpointing)' if self.checkpoint else ('on-device while_loop [stop: ' + self.stop.describe() + ']' if self.stop else 'on-device fori_loop')}",
+            f"  grad       {self.grad.describe() + ' (two-phase: stop_gradient adapt -> frozen-map eval, §11)' if self.grad else 'off'}",
         ]
         return "\n".join(lines)
 
@@ -193,10 +195,41 @@ def make_plan(workload, cfg: core.VegasConfig | None = None,
                 f"{rcfg.max_it}: the policy could never stop early — "
                 f"lower min_it or drop the policy")
 
+    # --- grad axis ----------------------------------------------------------
+    grad = execution.grad
+    if grad is not None:
+        if grad.mode not in GRAD_MODES:
+            raise PlanError(
+                f"GradPolicy.mode={grad.mode!r} is not one of {GRAD_MODES}")
+        if not grad.active:
+            grad = None  # mode='off': inert, plain run
+    if grad is not None:
+        cap = (backends_mod.GRAD_PATHWISE if grad.mode == "pathwise"
+               else backends_mod.GRAD_SCORE)
+        if not spec.supports(cap):
+            hint = (" (the fused kernel regenerates its RNG in-kernel — "
+                    "there is no JAX-level sample path to differentiate; "
+                    "use 'ref' or 'pallas')"
+                    if spec.supports(backends_mod.IN_KERNEL_RNG) else "")
+            raise PlanError(
+                f"backend {spec.name!r} does not declare '{cap}'; "
+                f"grad-capable backends for mode={grad.mode!r}: "
+                f"{_caps(cap)}{hint}")
+        if ckpt is not None:
+            raise PlanError(
+                "grad + checkpoint conflict: the two-phase differentiable "
+                "run is one traced program, a CheckpointPolicy forces the "
+                "per-iteration host loop — drop one")
+        if n_shards > 1:
+            raise PlanError(
+                "grad + mesh is not supported yet: the differentiable eval "
+                "pass is not wired through shard_map — drop the mesh (the "
+                "adapt phase alone does not dominate grad runs)")
+
     return Plan(workload=workload, cfg=rcfg, execution=execution,
                 backend=spec, is_family=is_family, batched=batched,
                 batch_size=batch_size, mesh=mesh, shard_axes=shard_axes,
-                n_shards=n_shards, checkpoint=ckpt, stop=stop)
+                n_shards=n_shards, checkpoint=ckpt, stop=stop, grad=grad)
 
 
 def _caps(capability: str) -> list[str]:

@@ -1,0 +1,34 @@
+"""repro.grad: differentiable integration through the VEGAS+ loop (§11).
+
+``differentiable(fn, dim, lower, upper, ...)`` wraps the two-phase
+estimator — ``stop_gradient``-frozen adaptation, then a frozen-map
+evaluation pass whose pathwise (or score-function) Monte Carlo gradient is
+exact — behind a `jax.custom_vjp`/`jax.custom_jvp` boundary.  The engine
+route is `GradPolicy` on `ExecutionConfig` (the sixth execution axis):
+``execute(make_plan(workload, cfg, execution=ExecutionConfig(grad=
+GradPolicy())))`` returns `GradResult` / `BatchGradResult`.
+"""
+
+from repro.engine.config import GRAD_MODES, GradPolicy  # noqa: F401
+
+from .api import (  # noqa: F401
+    MAX_SDEV_COMPONENTS,
+    BatchGradResult,
+    GradProgram,
+    GradResult,
+    differentiable,
+    execute_grad,
+)
+from .estimator import (  # noqa: F401
+    directional_moments,
+    mode_value,
+    rescale_edges,
+    score_surrogate,
+)
+
+__all__ = [
+    "BatchGradResult", "GRAD_MODES", "GradPolicy", "GradProgram",
+    "GradResult", "MAX_SDEV_COMPONENTS", "differentiable",
+    "directional_moments", "execute_grad", "mode_value", "rescale_edges",
+    "score_surrogate",
+]

@@ -1,0 +1,318 @@
+"""Differentiable integration: custom VJP/JVP around the VEGAS+ loop (§11).
+
+The estimator is TWO-PHASE.  Phase one (ADAPT) runs the ordinary iteration
+loop — `core.adapt_loop`, any backend, any stop policy — on
+``stop_gradient``-frozen inputs, so neither ``lax.while_loop`` nor a Pallas
+kernel ever sees a tangent.  Phase two (EVAL) is one fill over the frozen
+``(edges, n_h)`` with the eval key ``fold_in(key, max_it)`` (a stream no
+adapt iteration draws, `core.eval_key`); its value is the returned estimate
+and its *pathwise* derivative is an exact Monte Carlo estimator of
+``dI/dtheta``.  Unbiasedness of dropping the adapt phase from the gradient:
+for ANY fixed map, ``E[eval estimate | map] = I(theta)`` — the map's own
+theta-dependence therefore contributes zero expected gradient, it only
+reshuffles variance (DESIGN.md §11).
+
+The custom-AD boundary (`_make_program`) exists because the adapt loop is
+*not* differentiable (while_loop carries, in-kernel RNG on pallas backends)
+and must never be traced with tangents: `jax.custom_vjp`/`jax.custom_jvp`
+route every cotangent/tangent through the reference eval formulation
+instead, on the SAME chunk-keyed RNG stream the value pass used — the
+bit-exact RNG contract is what lets a ``pallas`` primal pair with a ``ref``
+cotangent (`engine.backends` ``grad-pathwise`` capability note).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import integrator as core
+from repro.core.integrands import Integrand
+from repro.engine import backends as backends_mod
+from repro.engine.config import GradPolicy
+
+from .estimator import directional_moments, mode_value, rescale_edges
+
+#: ``with_sdev`` integrates the derivative integrand once per parameter
+#: component; past this many components the quadratic cost stops being a
+#: side channel and the executor skips the sdev pass (the gradients
+#: themselves still come from ONE vjp regardless of component count).
+MAX_SDEV_COMPONENTS = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class GradProgram:
+    """The three phases of one differentiable run, as separable callables.
+
+    ``adapt(params, lower, upper, key) -> (edges, n_h, it)`` — the frozen
+    map (all outputs gradient-stopped); ``value(params, lower, upper, edges,
+    n_h, ekey)`` — the primal ``(mean, sigma2)`` on the plan's backend;
+    ``diff(...)`` — same signature and estimator, but pure-jnp (``ref``
+    fill, mode-wrapped integrand, bounds-rescaled edges): THE function whose
+    VJP/JVP is the gradient.  ``pair``/``pair_jvp`` assemble them behind a
+    `jax.custom_vjp`/`jax.custom_jvp` boundary with signature ``(params,
+    lower, upper, key) -> (mean, sigma2)`` — differentiable in the first
+    three, the key's cotangent is ``None``.
+    """
+    adapt: callable
+    value: callable
+    diff: callable
+    pair: callable
+    pair_jvp: callable
+    mode: str
+
+
+def _make_program(plan, fn, name: str) -> GradProgram:
+    """Build the two-phase program for ``fn(params, x)`` under a grad plan."""
+    rcfg, mode = plan.cfg, plan.grad.mode
+    backend_fill = backends_mod.bind_fill(rcfg, backend=plan.backend.name)
+    ref_fill = backends_mod.bind_fill(rcfg, backend="ref")
+
+    def integrand(params, lower, upper, wrapped=False):
+        m = mode if wrapped else "pathwise"  # raw value either way
+        return Integrand(name, rcfg.dim,
+                         lambda x: mode_value(fn, params, x, m), lower, upper)
+
+    def adapt(params, lower, upper, key):
+        sg = jax.lax.stop_gradient
+        p0 = jax.tree.map(sg, params)
+        ig = integrand(p0, sg(lower), sg(upper))
+        st = core.init_state(ig, rcfg, key)
+        st = core.adapt_loop(st, ig, rcfg, 0, fill_fn=backend_fill,
+                             stop=plan.stop)
+        return sg(st.edges), sg(st.n_h), st.it
+
+    def value(params, lower, upper, edges, n_h, ekey):
+        ig = integrand(params, lower, upper)
+        return core.eval_phase(edges, n_h, ig, rcfg, ekey,
+                               fill_fn=backend_fill)
+
+    def diff(params, lower, upper, edges0, n_h, ekey):
+        edges = rescale_edges(edges0, lower, upper)
+        ig = integrand(params, lower, upper, wrapped=True)
+        return core.eval_phase(edges, n_h, ig, rcfg, ekey, fill_fn=ref_fill)
+
+    @jax.custom_vjp
+    def pair(params, lower, upper, key):
+        edges, n_h, _ = adapt(params, lower, upper, key)
+        return value(params, lower, upper, edges, n_h,
+                     core.eval_key(key, rcfg))
+
+    def pair_fwd(params, lower, upper, key):
+        edges, n_h, _ = adapt(params, lower, upper, key)
+        ekey = core.eval_key(key, rcfg)
+        out = value(params, lower, upper, edges, n_h, ekey)
+        return out, (params, lower, upper, edges, n_h, ekey)
+
+    def pair_bwd(residuals, ct):
+        params, lower, upper, edges, n_h, ekey = residuals
+        _, vjp_fn = jax.vjp(
+            lambda p, l, u: diff(p, l, u, edges, n_h, ekey),
+            params, lower, upper)
+        gp, gl, gu = vjp_fn(ct)
+        return gp, gl, gu, None  # the PRNG key takes no cotangent
+
+    pair.defvjp(pair_fwd, pair_bwd)
+
+    @jax.custom_jvp
+    def pair_jvp(params, lower, upper, key):
+        edges, n_h, _ = adapt(params, lower, upper, key)
+        return value(params, lower, upper, edges, n_h,
+                     core.eval_key(key, rcfg))
+
+    @pair_jvp.defjvp
+    def pair_jvp_rule(primals, tangents):
+        params, lower, upper, key = primals
+        dp, dl, du, _ = tangents  # the key's tangent (float0) is unused
+        edges, n_h, _ = adapt(params, lower, upper, key)
+        ekey = core.eval_key(key, rcfg)
+        out = value(params, lower, upper, edges, n_h, ekey)
+        # Linear in (dp, dl, du) => jax.grad reaches THIS flavor too, by
+        # transposing the jvp of the reference eval pass.
+        _, dout = jax.jvp(lambda p, l, u: diff(p, l, u, edges, n_h, ekey),
+                          (params, lower, upper), (dp, dl, du))
+        return out, dout
+
+    return GradProgram(adapt=adapt, value=value, diff=diff, pair=pair,
+                       pair_jvp=pair_jvp, mode=mode)
+
+
+def differentiable(fn, dim: int, lower, upper,
+                   cfg: core.VegasConfig | None = None, *,
+                   execution=None, ad: str = "vjp",
+                   name: str = "integrand"):
+    """A differentiable estimate of ``int fn(params, x) dx`` over a box.
+
+    Returns ``est(params, key, lower=None, upper=None) -> mean`` — a jittable,
+    vmappable scalar function differentiable w.r.t. ``params`` (any pytree)
+    and the bounds; ``est.pair`` exposes ``(params, lower, upper, key) ->
+    (mean, sigma2)`` and ``est.plan`` the validated plan.  ``ad`` selects the
+    custom-AD flavor (``'vjp'`` default; ``'jvp'`` for forward-mode
+    consumers — ``jax.grad`` works through either).
+
+    Plan validation runs up front: if ``execution`` carries no active
+    `GradPolicy` a default pathwise one is attached, so e.g. a
+    ``pallas-fused`` backend is rejected here with the §11 `PlanError`, not
+    by a tracer error at grad time.
+    """
+    if ad not in ("vjp", "jvp"):
+        raise ValueError(f"ad={ad!r} is not one of ('vjp', 'jvp')")
+    from repro.engine import ExecutionConfig, make_plan
+    cfg = cfg or core.VegasConfig()
+    execution = execution or cfg.execution or ExecutionConfig()
+    if execution.grad is None or not execution.grad.active:
+        execution = dataclasses.replace(execution, grad=GradPolicy())
+    lower_t, upper_t = tuple(map(float, lower)), tuple(map(float, upper))
+    probe = Integrand(name, dim, lambda x: jnp.zeros(x.shape[:-1]),
+                      lower_t, upper_t)
+    plan = make_plan(probe, cfg, execution=execution)
+
+    prog = _make_program(plan, fn, name)
+    pair = prog.pair if ad == "vjp" else prog.pair_jvp
+    dt = jnp.dtype(plan.cfg.dtype)
+    l0 = jnp.asarray(lower_t, dt)
+    u0 = jnp.asarray(upper_t, dt)
+
+    def est(params, key, lower=None, upper=None):
+        l = l0 if lower is None else jnp.asarray(lower, dt)
+        u = u0 if upper is None else jnp.asarray(upper, dt)
+        return pair(params, l, u, key)[0]
+
+    est.pair = pair
+    est.program = prog
+    est.plan = plan
+    return est
+
+
+# --- executor entry ----------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GradResult:
+    """A single-scenario differentiable run: the estimate plus its boundary
+    sensitivities ``d(mean)/d(lower_j)``, ``d(mean)/d(upper_j)``."""
+    mean: float
+    sdev: float
+    grad_lower: np.ndarray   # (d,)
+    grad_upper: np.ndarray   # (d,)
+    n_it_used: int
+    mode: str
+
+    def __repr__(self):
+        return (f"GradResult(mean={self.mean:.8g}, sdev={self.sdev:.3g}, "
+                f"mode={self.mode}, n_it_used={self.n_it_used})")
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchGradResult:
+    """A family grad run: per-scenario estimates and parameter gradients.
+
+    ``grad`` mirrors ``family.params`` (every leaf keeps its leading batch
+    axis); ``grad_sdev`` (same structure, or ``None`` when the policy or the
+    component cap disabled it) is each gradient component's own Monte Carlo
+    standard error from the derivative-integrand pass."""
+    mean: np.ndarray         # (B,)
+    sdev: np.ndarray         # (B,)
+    grad: object             # pytree like family.params
+    grad_sdev: object        # pytree like family.params, or None
+    n_it_used: np.ndarray    # (B,)
+    mode: str
+
+    @property
+    def batch_size(self) -> int:
+        return self.mean.shape[0]
+
+    def __repr__(self):
+        lines = [f"BatchGradResult(B={self.batch_size}, mode={self.mode}, "
+                 f"with_sdev={self.grad_sdev is not None})"]
+        flat = jax.tree.leaves(self.grad)
+        for b in range(self.batch_size):
+            g = ", ".join(f"{np.asarray(leaf[b]).ravel()[0]:+.4g}"
+                          for leaf in flat)
+            lines.append(f"  [{b}] {self.mean[b]:.8g} +- {self.sdev[b]:.3g} "
+                         f"grad=[{g}]")
+        return "\n".join(lines)
+
+
+def execute_grad(plan, key):
+    """Run a grad plan: the executor's §11 route (``plan.grad`` active).
+
+    Single `Integrand` workloads return :class:`GradResult` with boundary
+    sensitivities; `IntegrandFamily` workloads return
+    :class:`BatchGradResult` with the whole two-phase program — adapt, eval,
+    VJP, and the optional per-component sdev passes — ``vmap``-ped over the
+    scenario axis as one jitted program (scenario ``b`` streams from
+    ``fold_in(key, b)``, matching the non-grad batch engine)."""
+    if plan.is_family:
+        return _execute_grad_family(plan, key)
+    return _execute_grad_single(plan, key)
+
+
+def _execute_grad_single(plan, key):
+    ig, rcfg = plan.workload, plan.cfg
+    dt = jnp.dtype(rcfg.dtype)
+    prog = _make_program(plan, lambda _p, x: ig.fn(x), ig.name)
+    l0, u0 = jnp.asarray(ig.lower, dt), jnp.asarray(ig.upper, dt)
+
+    def go(key):
+        p = jnp.zeros((), dt)  # a plain integrand carries no parameters
+        edges, n_h, it = prog.adapt(p, l0, u0, key)
+        ekey = core.eval_key(key, rcfg)
+        mean, sigma2 = prog.value(p, l0, u0, edges, n_h, ekey)
+        _, vjp_fn = jax.vjp(
+            lambda l, u: prog.diff(p, l, u, edges, n_h, ekey), l0, u0)
+        gl, gu = vjp_fn((jnp.ones_like(mean), jnp.zeros_like(sigma2)))
+        return mean, sigma2, gl, gu, it
+
+    mean, sigma2, gl, gu, it = jax.jit(go)(key)
+    return GradResult(float(mean), float(jnp.sqrt(sigma2)),
+                      np.asarray(gl), np.asarray(gu), int(it), prog.mode)
+
+
+def _execute_grad_family(plan, key):
+    from repro.batch.engine import scenario_keys
+    family, rcfg, policy = plan.workload, plan.cfg, plan.grad
+    dt = jnp.dtype(rcfg.dtype)
+    prog = _make_program(plan, family.fn, family.name)
+    ref_fill = backends_mod.bind_fill(rcfg, backend="ref")
+    l0 = jnp.asarray(family.lower, dt)
+    u0 = jnp.asarray(family.upper, dt)
+
+    p_ex = jax.tree.map(lambda leaf: leaf[0], family.params)
+    flat_ex, unravel = jax.flatten_util.ravel_pytree(p_ex)
+    n_comp = flat_ex.size
+    with_sdev = policy.with_sdev and n_comp <= MAX_SDEV_COMPONENTS
+
+    def one(p_b, key_b):
+        edges, n_h, it = prog.adapt(p_b, l0, u0, key_b)
+        ekey = core.eval_key(key_b, rcfg)
+        mean, sigma2 = prog.value(p_b, l0, u0, edges, n_h, ekey)
+        _, vjp_fn = jax.vjp(
+            lambda p: prog.diff(p, l0, u0, edges, n_h, ekey), p_b)
+        (gp,) = vjp_fn((jnp.ones_like(mean), jnp.zeros_like(sigma2)))
+        if not with_sdev:
+            return mean, sigma2, gp, it, jnp.zeros((n_comp,), dt)
+        flat_b, unravel_b = jax.flatten_util.ravel_pytree(p_b)
+        gs2 = []
+        for i in range(n_comp):  # static per-component loop (n_comp small)
+            tv = unravel_b(jnp.zeros_like(flat_b).at[i].set(1.0))
+            _, gs2_i = directional_moments(
+                family.fn, p_b, tv, l0, u0, edges, n_h, ekey, rcfg,
+                ref_fill, prog.mode)
+            gs2.append(gs2_i)
+        return mean, sigma2, gp, it, jnp.stack(gs2).astype(dt)
+
+    keys = scenario_keys(key, family.batch_size)
+    mean, sigma2, gp, it, gs2 = jax.jit(jax.vmap(one))(family.params, keys)
+
+    grad = jax.tree.map(np.asarray, gp)
+    grad_sdev = None
+    if with_sdev:
+        per = jax.vmap(lambda row: unravel(jnp.sqrt(row)))(gs2)
+        grad_sdev = jax.tree.map(np.asarray, per)
+    return BatchGradResult(np.asarray(mean), np.asarray(jnp.sqrt(sigma2)),
+                           grad, grad_sdev,
+                           np.asarray(it, dtype=np.int64), prog.mode)

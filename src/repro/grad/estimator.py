@@ -1,0 +1,101 @@
+"""Differentiable-estimator primitives for the two-phase grad run (§11).
+
+The frozen-map evaluation pass (`core.eval_phase` over the ``ref`` backend)
+is pure jnp — scan, scatter-add, log/exp jacobian — hence differentiable
+w.r.t. anything the integrand closes over AND w.r.t. the map edges.  This
+module supplies the three pieces `repro.grad.api` composes around it:
+
+  * :func:`rescale_edges` — re-expresses the converged (frozen) map on
+    traced integration bounds via an affine change of variables, so
+    ``d(estimate)/d(lower, upper)`` flows through the map geometry while the
+    map's *shape* stays ``stop_gradient``-anchored;
+  * :func:`score_surrogate` — the score-function rewrite whose value equals
+    the integrand but whose tangent is ``f · d(log f)`` (the log-derivative
+    trick), for ``GradPolicy(mode='score')``;
+  * :func:`directional_moments` — integrates the *derivative integrand*
+    ``x -> d f(theta + eps v, x)/d eps`` through the same frozen-map pass,
+    yielding both the directional gradient and its own Monte Carlo variance
+    (the ``with_sdev`` uncertainty channel: a gradient estimate is itself a
+    VEGAS integral, so it gets a sigma like any other).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fill as fill_mod
+from repro.core.integrands import Integrand
+
+
+def rescale_edges(edges0, lower, upper):
+    """Affine change of variables: the frozen map re-anchored on traced bounds.
+
+    ``edges0 (d, ninc+1)`` is a converged map whose endpoints are the
+    *adapt-time* bounds ``(l0, u0)`` (read off the map itself and
+    ``stop_gradient``-ed, so the anchor carries no tangent).  Each row is
+    mapped through ``t = (e - l0) / (u0 - l0)``, ``e' = lower + (upper -
+    lower) * t`` — endpoints land exactly on the traced bounds, interior
+    knots keep their relative positions, and the per-interval jacobian
+    scales by ``(upper - lower) / (u0 - l0) > 0`` uniformly.
+
+    Evaluated at ``lower == l0, upper == u0`` the rescale is a value-level
+    identity (up to one rounding), so the backward pass linearizes at the
+    same map the primal used; its derivative gives the exact boundary
+    sensitivity — for a constant integrand ``c``, ``estimate = c·prod(upper
+    - lower)`` and ``d(est)/d(upper_j) = est / (upper_j - lower_j)``
+    (tests/test_grad_properties.py holds this identity to float precision).
+    """
+    sg = jax.lax.stop_gradient
+    e0 = sg(edges0)
+    l0, u0 = e0[:, :1], e0[:, -1:]
+    t = (e0 - l0) / (u0 - l0)
+    return lower[:, None] + (upper - lower)[:, None] * t
+
+
+def score_surrogate(f, tiny: float = 1e-30):
+    """Log-derivative surrogate: value ``== f``, tangent ``== f · d(log f)``.
+
+    ``stop_gradient(f) * (1 + log f - stop_gradient(log f))`` — the standard
+    score-function identity ``f · d(log f) = df`` means the surrogate's
+    gradient EQUALS the pathwise one wherever ``f > tiny``; where ``f <=
+    tiny`` (the clamp's flat region — e.g. an option payoff's out-of-the-
+    money samples) the tangent is exactly zero.  The point of the mode is
+    the *form*: only ``log f``'s derivative is consumed, which is what a
+    log-space integrand (Bayesian-evidence workloads) can supply without
+    ever exponentiating its tangent.
+    """
+    sg = jax.lax.stop_gradient
+    logf = jnp.log(jnp.maximum(f, tiny))
+    return sg(f) * (1.0 + logf - sg(logf))
+
+
+def mode_value(fn, params, x, mode: str):
+    """The eval-pass integrand under a grad mode: raw ``fn`` for
+    ``pathwise``, the score surrogate for ``score`` (same value either way —
+    the modes differ only in tangent)."""
+    f = fn(params, x)
+    return score_surrogate(f) if mode == "score" else f
+
+
+def directional_moments(fn, params, tangent, lower, upper, edges, n_h, ekey,
+                        rcfg, ref_fill, mode: str = "pathwise"):
+    """Frozen-map moments of the derivative integrand along ``tangent``.
+
+    Builds ``dfn(x) = d/d eps [mode_value(fn, params + eps·tangent, x)]`` via
+    ``jax.jvp`` and runs ONE reference fill of it over the same frozen
+    ``(edges, n_h)`` and the same eval key as the value pass.  Returns
+    ``(g, g_sigma2)`` from :func:`fill.estimate_from_cubes`: ``g`` is the
+    directional gradient (it matches the VJP of the eval pass contracted
+    with ``tangent``, same sample paths), ``g_sigma2`` its Monte Carlo
+    variance — the ``GradPolicy(with_sdev=True)`` error bar.
+    """
+    def dfn(x):
+        return jax.jvp(lambda p: mode_value(fn, p, x, mode),
+                       (params,), (tangent,))[1]
+
+    ig = Integrand("d_" + str(getattr(fn, "__name__", "integrand")),
+                   rcfg.dim, dfn, lower, upper)
+    res = ref_fill(edges, n_h, ekey, ig)
+    g, g_sigma2, _ = fill_mod.estimate_from_cubes(res, n_h)
+    return g, g_sigma2

@@ -20,8 +20,8 @@ import jax
 from repro.configs.vegas import PAPER_CONFIGS
 from repro.core import VegasConfig
 from repro.core import integrands as igs
-from repro.engine import (CheckpointPolicy, ExecutionConfig, StopPolicy,
-                          available, execute, make_plan)
+from repro.engine import (CheckpointPolicy, ExecutionConfig, GradPolicy,
+                          StopPolicy, available, execute, make_plan)
 
 INTEGRANDS = {
     "sine_exp": igs.make_sine_exp,
@@ -60,6 +60,14 @@ def add_execution_args(ap: argparse.ArgumentParser) -> None:
                          "(combines with --rtol as max(rtol*|mean|, atol))")
     ap.add_argument("--min-it", type=int, default=2,
                     help="never stop before this many iterations")
+    ap.add_argument("--grad", choices=["off", "pathwise", "score"],
+                    default="off",
+                    help="differentiable two-phase run (repro.grad, §11): "
+                         "adapt with gradients stopped, then a frozen-map "
+                         "eval pass; reports d(estimate)/d(params, bounds)")
+    ap.add_argument("--no-grad-sdev", action="store_true",
+                    help="skip the per-component gradient error bars "
+                         "(the derivative-integrand passes)")
     ap.add_argument("--plan", action="store_true",
                     help="print the validated execution plan and exit")
 
@@ -77,8 +85,11 @@ def build_execution(args, **extra) -> ExecutionConfig:
     # not be silently dropped here.
     stop = (StopPolicy(rtol=args.rtol, atol=args.atol, min_it=args.min_it)
             if (args.rtol != 0 or args.atol != 0) else None)
+    grad = (GradPolicy(mode=args.grad, with_sdev=not args.no_grad_sdev)
+            if args.grad != "off" else None)
     return ExecutionConfig(backend=args.backend, interpret=interpret,
-                           tile=args.tile, mesh=mesh, stop=stop, **extra)
+                           tile=args.tile, mesh=mesh, stop=stop, grad=grad,
+                           **extra)
 
 
 def main(argv=None):
@@ -112,9 +123,17 @@ def main(argv=None):
     dt = time.time() - t0
     print(f"integrand={ig.name} dim={ig.dim} config={args.config} "
           f"[{execution.describe()}]")
-    print(f"  result  = {res.mean:.8g} +- {res.sdev:.3g} "
-          f"(chi2/dof {res.chi2_dof:.2f}, {res.n_it} combined, "
-          f"{res.n_it_used}/{args.iters} iterations executed)")
+    if plan.grad is not None:
+        # GradResult: the frozen-map eval estimate + boundary sensitivities.
+        print(f"  result  = {res.mean:.8g} +- {res.sdev:.3g} "
+              f"(mode={res.mode}, {res.n_it_used} adapt iterations)")
+        for j in range(ig.dim):
+            print(f"  d/d bounds[{j}]  lower {res.grad_lower[j]:+.5g}  "
+                  f"upper {res.grad_upper[j]:+.5g}")
+    else:
+        print(f"  result  = {res.mean:.8g} +- {res.sdev:.3g} "
+              f"(chi2/dof {res.chi2_dof:.2f}, {res.n_it} combined, "
+              f"{res.n_it_used}/{args.iters} iterations executed)")
     if ig.target is not None:
         pull = (res.mean - ig.target) / max(res.sdev, 1e-30)
         print(f"  target  = {ig.target:.8g}  pull = {pull:+.2f} sigma")

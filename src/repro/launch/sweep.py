@@ -57,6 +57,33 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     cache = MapCache(args.cache) if args.cache else None
 
+    if args.grad != "off":
+        # Grad sweep: per-scenario parameter gradients (the Greeks path).
+        # The grad program takes no warm-start cache / serial baseline.
+        if cache is not None or args.compare_serial:
+            ap.error("--grad does not combine with --cache/--compare-serial")
+        t0 = time.perf_counter()
+        res = run_batch(family, cfg, key=key)
+        dt = time.perf_counter() - t0
+        print(f"family={family.name} B={res.batch_size} dim={family.dim} "
+              f"grad={res.mode} [{execution.describe()}]")
+        names = sorted(res.grad) if isinstance(res.grad, dict) else None
+        params = np.asarray(jax.tree.leaves(family.params)[0])
+        for b in range(res.batch_size):
+            line = (f"  [{b}] param={params[b]}  "
+                    f"{res.mean[b]:.8g} +- {res.sdev[b]:.3g}")
+            if names:
+                for n in names:
+                    line += f"  d/d{n}={np.asarray(res.grad[n])[b]:+.5g}"
+                    if res.grad_sdev is not None:
+                        line += f"(+-{np.asarray(res.grad_sdev[n])[b]:.2g})"
+            else:
+                g = np.asarray(jax.tree.leaves(res.grad)[0][b]).ravel()
+                line += "  grad=" + np.array2string(g, precision=4)
+            print(line)
+        print(f"  grad sweep wall = {dt:.2f}s")
+        return res
+
     t0 = time.perf_counter()
     res = run_batch(family, cfg, key=key, cache=cache)
     dt_batch = time.perf_counter() - t0

@@ -1,0 +1,401 @@
+"""Gradient conformance suite (§11): is the pathwise gradient CORRECT?
+
+Four layers of evidence, mirroring how the estimator is built:
+
+  * **frozen-map exactness** — with the map/stratification/eval-key held
+    fixed, the custom-AD gradient must match a central finite difference of
+    the very same deterministic program to float precision (no statistics
+    involved: the eval pass is a pure function of its inputs);
+  * **full-run conformance** — ``jax.grad`` of the whole two-phase run
+    (adapt included) vs a central FD of the run itself, within 3 combined
+    sigma on all three paper families (gaussian peak / ridge / asian);
+  * **gradient pulls** — over N seeded replicas (one vmapped program), the
+    gradient pulls ``(g - dI/dtheta_true) / sigma_g`` must be ~ N(0, 1):
+    the ``with_sdev`` error bars mean what they claim (same binomial
+    coverage oracle as tests/test_statistical.py, same REPRO_STATS_SEED
+    CI matrix);
+  * **structural identities** — zero gradient for parameter-independent
+    integrands, vjp == jvp flavor, vmapped-sweep == stacked per-scenario
+    grads, ref == pallas backend pairing, and the `combine_results`
+    NaN-safety regression for differentiated sentinel rows.
+"""
+
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.batch.family import (make_asian_family, make_asian_greeks_family,
+                                make_gaussian_family, make_ridge_family)
+from repro.core import VegasConfig
+from repro.core import integrator as core
+from repro.engine import ExecutionConfig, GradPolicy, execute, make_plan
+from repro.grad import differentiable, directional_moments, execute_grad
+from repro.grad.api import BatchGradResult, GradResult
+
+SEED = int(os.environ.get("REPRO_STATS_SEED", "0"))
+KEY = jax.random.PRNGKey(SEED)
+
+#: Small but honest config: enough evals that the eval pass's sigma is a
+#: usable yardstick, small enough that the whole module runs in seconds.
+CFG = VegasConfig(neval=6_000, max_it=8, skip=4, ninc=64, chunk=2048)
+
+DIM = 3
+UNIT = ((0.0,) * DIM, (1.0,) * DIM)
+
+
+def _gaussian_fn(sigma=0.2):
+    norm = 1.0 / (2.0 * math.pi * sigma**2) ** (DIM / 2.0)
+
+    def fn(mu, x):
+        return norm * jnp.exp(-jnp.sum((x - mu) ** 2, -1) / (2.0 * sigma**2))
+    return fn
+
+
+def _gaussian_dI_dmu(mu, sigma=0.2, dim=DIM):
+    """Analytic d/dmu of the unit-cube gaussian-peak integral (all dims
+    share the peak location mu): I = A(mu)^dim."""
+    s2 = sigma * math.sqrt(2.0)
+    a = 0.5 * (math.erf((1.0 - mu) / s2) + math.erf(mu / s2))
+    da = (math.exp(-((mu / s2) ** 2))
+          - math.exp(-(((1.0 - mu) / s2) ** 2))) / (s2 * math.sqrt(math.pi))
+    return dim * a ** (dim - 1) * da
+
+
+# --- frozen-map exactness ----------------------------------------------------
+
+def _scalar_families():
+    """(name, fn, p0, tangent, bounds, eps) — each reduced to a scalar
+    directional parameter t around p0 so one FD covers vector params too."""
+    ridge = make_ridge_family(np.array([[0.6, 0.8, 1.0]]), dim=3, n_peaks=8)
+    asian = make_asian_family(np.array([100.0]), n_steps=4)
+    v = jnp.asarray([0.5, -0.3, 0.8], jnp.float32)
+    return [
+        ("gaussian", _gaussian_fn(), jnp.float32(0.15), jnp.float32(1.0),
+         UNIT, 3e-3),
+        ("ridge", ridge.fn, jnp.asarray([0.6, 0.8, 1.0], jnp.float32), v,
+         (ridge.lower, ridge.upper), 3e-3),
+        ("asian", asian.fn, jnp.float32(100.0), jnp.float32(1.0),
+         (asian.lower, asian.upper), 0.5),
+    ]
+
+
+@pytest.mark.parametrize("name,fn,p0,tv,bounds,eps",
+                         _scalar_families(),
+                         ids=["gaussian", "ridge", "asian"])
+def test_frozen_map_grad_matches_fd(name, fn, p0, tv, bounds, eps):
+    """With (edges, n_h, ekey) pinned, `diff` is a deterministic function —
+    its custom-free jax.grad and a central FD of it must agree to float
+    precision, independent of any Monte Carlo statistics."""
+    lower, upper = bounds
+    est = differentiable(fn, len(lower), lower, upper, CFG, name=name)
+    prog = est.program
+    dt = jnp.dtype(est.plan.cfg.dtype)
+    l0, u0 = jnp.asarray(lower, dt), jnp.asarray(upper, dt)
+    edges, n_h, _ = jax.jit(prog.adapt)(p0, l0, u0, KEY)
+    ekey = core.eval_key(KEY, est.plan.cfg)
+
+    def along(t):
+        return prog.diff(p0 + t * tv, l0, u0, edges, n_h, ekey)[0]
+
+    g = float(jax.grad(along)(jnp.zeros((), dt)))
+    fd = float((along(jnp.asarray(eps, dt)) - along(jnp.asarray(-eps, dt)))
+               / (2.0 * eps))
+    assert np.isclose(g, fd, rtol=2e-2, atol=5e-4), (name, g, fd)
+
+
+# --- full-run conformance (3 combined sigma) ---------------------------------
+
+@pytest.mark.parametrize("name,fn,p0,tv,bounds,eps",
+                         _scalar_families(),
+                         ids=["gaussian", "ridge", "asian"])
+def test_full_run_grad_matches_fd_three_sigma(name, fn, p0, tv, bounds, eps):
+    """jax.grad of the FULL run (adapt + eval) vs central FD of the full
+    run.  The FD re-adapts at theta +- eps, so both its eval noise and the
+    map-shift noise enter; the bound is 3 x the combined sigma of the
+    gradient estimate and the FD quotient (conservative: common random
+    numbers correlate the two FD runs, shrinking the true spread)."""
+    lower, upper = bounds
+    est = differentiable(fn, len(lower), lower, upper, CFG, name=name)
+    rcfg = est.plan.cfg
+    dt = jnp.dtype(rcfg.dtype)
+    l0, u0 = jnp.asarray(lower, dt), jnp.asarray(upper, dt)
+
+    def along(t):
+        return est.pair(jax.tree.map(lambda p: p + t * tv, p0),
+                        l0, u0, KEY)
+    g = float(jax.grad(lambda t: along(t)[0])(jnp.zeros((), dt)))
+
+    mp, s2p = along(jnp.asarray(eps, dt))
+    mm, s2m = along(jnp.asarray(-eps, dt))
+    fd = float(mp - mm) / (2.0 * eps)
+    sigma_fd = math.sqrt(float(s2p) + float(s2m)) / (2.0 * eps)
+
+    # The gradient's own error bar: the derivative integrand through the
+    # same frozen map/eval stream the grad used.
+    from repro.engine import backends as backends_mod
+    prog = est.program
+    edges, n_h, _ = jax.jit(prog.adapt)(p0, l0, u0, KEY)
+    _, g_sigma2 = directional_moments(
+        fn, p0, tv, l0, u0, edges, n_h, core.eval_key(KEY, rcfg), rcfg,
+        backends_mod.bind_fill(rcfg, backend="ref"))
+    combined = math.hypot(math.sqrt(float(g_sigma2)), sigma_fd)
+    assert abs(g - fd) <= 3.0 * combined + 1e-4, (
+        f"{name}: grad {g:+.5g} vs FD {fd:+.5g} "
+        f"({abs(g - fd) / max(combined, 1e-30):.2f} combined sigma)")
+
+
+def test_full_run_grad_matches_analytic_gaussian():
+    """Against the exact erf-product derivative — no FD noise at all."""
+    fn = _gaussian_fn()
+    est = differentiable(fn, DIM, *UNIT, CFG, name="gaussian")
+    rcfg = est.plan.cfg
+    mu0 = jnp.float32(0.15)
+    g = float(jax.grad(lambda m: est(m, KEY))(mu0))
+    truth = _gaussian_dI_dmu(0.15)
+
+    from repro.engine import backends as backends_mod
+    prog = est.program
+    dt = jnp.dtype(rcfg.dtype)
+    l0, u0 = jnp.zeros(DIM, dt), jnp.ones(DIM, dt)
+    edges, n_h, _ = jax.jit(prog.adapt)(mu0, l0, u0, KEY)
+    _, g_sigma2 = directional_moments(
+        fn, mu0, jnp.float32(1.0), l0, u0, edges, n_h,
+        core.eval_key(KEY, rcfg), rcfg,
+        backends_mod.bind_fill(rcfg, backend="ref"))
+    sigma_g = math.sqrt(float(g_sigma2))
+    assert abs(g - truth) <= 4.0 * sigma_g + 1e-4, (g, truth, sigma_g)
+
+
+# --- gradient pull distribution (the with_sdev error bars are honest) --------
+
+N_RUNS = 50
+MIN_COVERED = 42  # binomial floor at p=0.95, n=50 (test_statistical.py)
+
+
+def test_grad_pull_distribution():
+    """N seeded replicas of d(gaussian integral)/d(mu), one vmapped grad
+    program: pulls against the analytic derivative, scaled by each
+    replica's own derivative-integrand sigma, must be ~ N(0, 1)."""
+    fam = make_gaussian_family(np.full(N_RUNS, 0.15), dim=DIM, sigma=0.2)
+    cfg = CFG.with_execution(ExecutionConfig(grad=GradPolicy()))
+    plan = make_plan(fam, cfg)
+    res = execute(plan, key=KEY)
+    assert isinstance(res, BatchGradResult) and res.grad_sdev is not None
+
+    g = np.asarray(jax.tree.leaves(res.grad)[0])          # (N,)
+    sg = np.asarray(jax.tree.leaves(res.grad_sdev)[0])    # (N,)
+    truth = _gaussian_dI_dmu(0.15)
+    pulls = (g - truth) / sg
+
+    covered = int(np.sum(np.abs(pulls) <= 1.96))
+    assert covered >= MIN_COVERED, (
+        f"grad pulls: only {covered}/{N_RUNS} within 1.96 sigma — "
+        f"grad_sdev underestimates the gradient error")
+    assert abs(np.mean(pulls)) <= 4.2 / math.sqrt(N_RUNS), (
+        f"grad pull mean {np.mean(pulls):+.3f} — biased gradient estimator")
+    assert 0.55 <= np.std(pulls) <= 1.55, (
+        f"grad pull std {np.std(pulls):.3f} — mis-scaled grad_sdev")
+
+
+# --- structural identities ---------------------------------------------------
+
+def test_zero_gradient_for_parameter_independent_integrand():
+    """fn ignores params => the cotangent never reaches them: exact zeros,
+    not merely small ones."""
+    fn = lambda p, x: jnp.prod(jnp.sin(math.pi * x) * math.pi / 2.0, -1)
+    est = differentiable(fn, 2, (0.0, 0.0), (1.0, 1.0), CFG, name="sine")
+    p = {"a": jnp.float32(0.3), "b": jnp.arange(3, dtype=jnp.float32)}
+    g = jax.grad(lambda q: est(q, KEY))(p)
+    for leaf in jax.tree.leaves(g):
+        assert np.all(np.asarray(leaf) == 0.0), g
+
+
+def test_jvp_flavor_matches_vjp_flavor():
+    fn = _gaussian_fn()
+    kw = dict(cfg=CFG, name="gaussian")
+    est_v = differentiable(fn, DIM, *UNIT, **kw)
+    est_j = differentiable(fn, DIM, *UNIT, ad="jvp", **kw)
+    mu0 = jnp.float32(0.3)
+    gv = jax.grad(lambda m: est_v(m, KEY))(mu0)
+    gj = jax.grad(lambda m: est_j(m, KEY))(mu0)
+    # Same program on both sides of the custom-AD boundary: bitwise.
+    assert np.asarray(gv).tobytes() == np.asarray(gj).tobytes(), (gv, gj)
+    # Forward mode directly: same estimator, but the tangent accumulates
+    # alongside the primal in a different f32 summation order than the
+    # transposed cotangent — close, not bitwise.
+    _, tj = jax.jvp(lambda m: est_j(m, KEY), (mu0,), (jnp.float32(1.0),))
+    assert np.isclose(float(gv), float(tj), rtol=3e-2), (gv, tj)
+
+
+def test_vmapped_sweep_grad_matches_stacked():
+    """grad-of-vmapped-sweep == stacked per-scenario grads: summing the
+    vmapped estimates and differentiating must equal vmapping the
+    per-scenario grad (bitwise — same traced program, scenarios are
+    independent so the sum's cotangent fans out as identity), and both must
+    match serially-stacked single-scenario grads stream-for-stream."""
+    from repro.batch.engine import scenario_keys
+    asian = make_asian_family(np.array([90.0, 100.0, 110.0]), n_steps=4)
+    est = differentiable(asian.fn, asian.dim, asian.lower, asian.upper, CFG,
+                         name=asian.name)
+    strikes = jnp.asarray([90.0, 100.0, 110.0], jnp.float32)
+    keys = scenario_keys(KEY, 3)
+
+    per = jax.vmap(lambda s, k: jax.grad(lambda p: est(p, k))(s))
+    g_vmapped = per(strikes, keys)
+    g_sum = jax.grad(lambda s: jnp.sum(jax.vmap(
+        lambda sb, kb: est(sb, kb))(s, keys)))(strikes)
+    assert (np.asarray(g_vmapped).tobytes()
+            == np.asarray(g_sum).tobytes()), (g_vmapped, g_sum)
+
+    g_serial = np.stack([
+        np.asarray(jax.grad(lambda p: est(p, jax.random.fold_in(KEY, b)))(
+            strikes[b])) for b in range(3)])
+    np.testing.assert_allclose(np.asarray(g_vmapped), g_serial,
+                               rtol=2e-4, atol=1e-6)
+
+
+def test_pallas_backend_grad_pairs_with_ref():
+    """backend='pallas' (value from the kernel, cotangent through the ref
+    formulation on the same chunk-keyed stream) must reproduce the ref
+    backend's gradient — the grad-pathwise capability pairing."""
+    fn = _gaussian_fn()
+    tiny = VegasConfig(neval=2_000, max_it=3, ninc=32, chunk=1024)
+    mu0 = jnp.float32(0.3)
+    grads = {}
+    for backend in ("ref", "pallas"):
+        est = differentiable(fn, DIM, *UNIT, tiny,
+                             execution=ExecutionConfig(backend=backend),
+                             name="gaussian")
+        grads[backend] = np.asarray(jax.grad(lambda m: est(m, KEY))(mu0))
+    np.testing.assert_allclose(grads["pallas"], grads["ref"],
+                               rtol=1e-4, atol=1e-7)
+
+
+def test_grad_sdev_directional_matches_vjp():
+    """The derivative-integrand pass (with_sdev channel) is the SAME
+    estimator the vjp computes — its mean must match the vjp gradient on
+    identical sample paths."""
+    from repro.engine import backends as backends_mod
+    fn = _gaussian_fn()
+    est = differentiable(fn, DIM, *UNIT, CFG, name="gaussian")
+    rcfg = est.plan.cfg
+    prog = est.program
+    dt = jnp.dtype(rcfg.dtype)
+    mu0 = jnp.float32(0.3)
+    l0, u0 = jnp.zeros(DIM, dt), jnp.ones(DIM, dt)
+    edges, n_h, _ = jax.jit(prog.adapt)(mu0, l0, u0, KEY)
+    ekey = core.eval_key(KEY, rcfg)
+
+    _, vjp_fn = jax.vjp(lambda p: prog.diff(p, l0, u0, edges, n_h, ekey),
+                        mu0)
+    (gp,) = vjp_fn((jnp.float32(1.0), jnp.float32(0.0)))
+    g_dir, _ = directional_moments(
+        fn, mu0, jnp.float32(1.0), l0, u0, edges, n_h, ekey, rcfg,
+        backends_mod.bind_fill(rcfg, backend="ref"))
+    assert np.isclose(float(gp), float(g_dir), rtol=1e-4), (gp, g_dir)
+
+
+# --- engine routing ----------------------------------------------------------
+
+def test_execute_grad_single_bounds_sensitivities():
+    """The engine route for a plain Integrand: GradResult with boundary
+    sensitivities; on a constant integrand they obey the exact product
+    rule d(est)/d(upper_j) = est / (upper_j - lower_j)."""
+    from repro.core.integrands import Integrand
+    ig = Integrand("const", 2, lambda x: jnp.full(x.shape[:-1], 2.5),
+                   (0.0, 0.0), (2.0, 1.0), target=5.0)
+    cfg = VegasConfig(neval=2_000, max_it=3, ninc=32, chunk=1024,
+                      execution=ExecutionConfig(grad=GradPolicy()))
+    res = execute(make_plan(ig, cfg), key=KEY)
+    assert isinstance(res, GradResult) and res.mode == "pathwise"
+    widths = np.array([2.0, 1.0])
+    np.testing.assert_allclose(res.mean, 5.0, rtol=1e-5)
+    np.testing.assert_allclose(res.grad_upper, res.mean / widths, rtol=1e-4)
+    np.testing.assert_allclose(res.grad_lower, -res.mean / widths, rtol=1e-4)
+    assert res.n_it_used == 3
+
+
+def test_execute_grad_family_greeks():
+    """The family route: per-scenario dual delta d(price)/d(strike) and
+    vega d(price)/d(sigma) against central FDs of the closed-form price
+    curve, within 3 grad-sigma each."""
+    from repro.core.targets import asian_geometric_closed_form as price
+    strikes, sigmas = np.array([90.0, 100.0, 110.0]), np.full(3, 0.2)
+    fam = make_asian_greeks_family(strikes, sigmas, n_steps=4)
+    cfg = VegasConfig(neval=8_000, max_it=8, ninc=64, chunk=2048,
+                      execution=ExecutionConfig(grad=GradPolicy()))
+    res = execute(make_plan(fam, cfg), key=KEY)
+    assert isinstance(res, BatchGradResult)
+    assert set(res.grad) == {"strike", "sigma"} and res.grad_sdev is not None
+
+    kw = dict(s0=100.0, r=0.1, t_mat=1.0, n=4)
+    for b, (k, sig) in enumerate(zip(strikes, sigmas)):
+        dk = (price(strike=k + 0.5, sigma=sig, **kw)
+              - price(strike=k - 0.5, sigma=sig, **kw))
+        dv = (price(strike=k, sigma=sig + 5e-3, **kw)
+              - price(strike=k, sigma=sig - 5e-3, **kw)) / 1e-2
+        assert abs(res.grad["strike"][b] - dk) <= \
+            3.0 * res.grad_sdev["strike"][b] + 1e-3, (b, res.grad, dk)
+        assert abs(res.grad["sigma"][b] - dv) <= \
+            3.0 * res.grad_sdev["sigma"][b] + 5e-2, (b, res.grad, dv)
+
+
+def test_executor_rejects_hooks_on_grad_plans():
+    fn_ig = make_gaussian_family(np.array([0.5]), dim=2).instance(0)
+    cfg = VegasConfig(neval=1_000, max_it=2, ninc=16,
+                      execution=ExecutionConfig(grad=GradPolicy()))
+    plan = make_plan(fn_ig, cfg)
+    with pytest.raises(ValueError, match="grad plan takes no"):
+        execute(plan, key=KEY, checkpoint_cb=lambda it, st: None)
+    with pytest.raises(ValueError, match="grad plan takes no"):
+        execute(plan, key=KEY, fill_fn=lambda *a, **k: None)
+
+
+def test_execute_grad_matches_primal_run_value():
+    """The grad route's primal must be the plain run's eval-phase value —
+    same backend, same frozen map, same eval stream (regression against the
+    two phases drifting apart)."""
+    fam = make_gaussian_family(np.array([0.5]), dim=2)
+    ig = fam.instance(0)
+    cfg = VegasConfig(neval=2_000, max_it=3, ninc=32, chunk=1024)
+    gres = execute(make_plan(ig, cfg.with_execution(
+        ExecutionConfig(grad=GradPolicy(with_sdev=False)))), key=KEY)
+    # Reconstruct the same two-phase value by hand from the primal pieces.
+    rcfg = cfg.resolve(ig.dim)
+    st = core.init_state(ig, rcfg, KEY)
+    st = jax.jit(lambda s: core.adapt_loop(s, ig, rcfg, 0))(st)
+    m, _ = core.eval_phase(st.edges, st.n_h, ig, rcfg,
+                           core.eval_key(KEY, rcfg))
+    assert np.isclose(gres.mean, float(m), rtol=1e-6), (gres.mean, m)
+
+
+# --- combine_results NaN-safety regression (§11 docstring contract) ----------
+
+def test_combine_results_grad_nan_safe():
+    """Reverse-mode through combine_results with (0, inf) sentinel rows —
+    the early-stopped buffer shape — must yield finite gradients; the old
+    bare ``1/wsum`` NaN-poisoned them via 0 * inf in the unselected
+    branch."""
+    def mean_of(m, n_done):
+        results = jnp.stack(
+            [jnp.stack([m, jnp.float32(0.0)]),
+             jnp.stack([jnp.float32(0.02), jnp.float32(jnp.inf)])], axis=1)
+        return core.combine_results(results, 0, n_done)[0]
+
+    g = jax.grad(mean_of)(jnp.float32(0.3), 1)
+    assert np.isfinite(float(g)) and np.isclose(float(g), 1.0), g
+
+    # n_done = 0: nothing usable — the sentinel result, with a defined
+    # (zero) gradient rather than NaN.
+    v, g0 = jax.value_and_grad(mean_of)(jnp.float32(0.3), 0)
+    assert float(v) == 0.0 and float(g0) == 0.0, (v, g0)
+
+    # And the full sentinel tuple keeps its documented shape.
+    results = jnp.stack([jnp.zeros(4), jnp.full(4, jnp.inf)], 1)
+    mean, sdev, chi2, n_used = core.combine_results(results, 0, 4)
+    assert (float(mean), float(chi2), int(n_used)) == (0.0, 0.0, 0)
+    assert np.isinf(float(sdev))

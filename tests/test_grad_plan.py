@@ -1,0 +1,99 @@
+"""Plan-time validation of the grad axis (§11): every unsupported
+GradPolicy combination must die as a one-line PlanError naming the fix —
+never as a tracer error from inside the custom-AD machinery."""
+
+import types
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import VegasConfig
+from repro.core.integrands import Integrand
+from repro.engine import (CheckpointPolicy, ExecutionConfig, GradPolicy,
+                          PlanError, execute, make_plan)
+
+IG = Integrand("flat", 2, lambda x: jnp.ones(x.shape[:-1]),
+               (0.0, 0.0), (1.0, 1.0), target=1.0)
+FAST = VegasConfig(neval=1_000, max_it=2, ninc=16, chunk=512)
+
+
+def _plan(**exec_kw):
+    return make_plan(IG, FAST, execution=ExecutionConfig(**exec_kw))
+
+
+def test_grad_rejects_fused_in_kernel_rng():
+    with pytest.raises(PlanError, match="in-kernel") as ei:
+        _plan(backend="pallas-fused", grad=GradPolicy())
+    # The error names the capable backends, not just the failure.
+    assert "ref" in str(ei.value) and "pallas" in str(ei.value)
+
+
+def test_score_mode_rejects_pallas():
+    """score needs the sample-level surrogate rewrite => ref only."""
+    with pytest.raises(PlanError, match="grad-score"):
+        _plan(backend="pallas", grad=GradPolicy(mode="score"))
+    # pathwise on the same backend is fine (value/cotangent pairing).
+    assert _plan(backend="pallas",
+                 grad=GradPolicy()).grad.mode == "pathwise"
+
+
+def test_grad_rejects_checkpoint():
+    with pytest.raises(PlanError, match="grad \\+ checkpoint"):
+        _plan(grad=GradPolicy(),
+              checkpoint=CheckpointPolicy(directory="/tmp/x"))
+
+
+def test_grad_rejects_mesh():
+    """A >1-shard mesh cannot carry the differentiable eval pass yet.  The
+    check is pure plan arithmetic (mesh.shape products), so a duck-typed
+    2-device mesh exercises it on a 1-device CPU host."""
+    fake_mesh = types.SimpleNamespace(axis_names=("dev",), shape={"dev": 2})
+    with pytest.raises(PlanError, match="grad \\+ mesh"):
+        _plan(grad=GradPolicy(), mesh=fake_mesh, shard_axes=("dev",))
+
+
+def test_grad_rejects_bogus_mode():
+    with pytest.raises(PlanError, match="not one of"):
+        _plan(grad=GradPolicy(mode="adjoint"))
+
+
+def test_grad_off_normalizes_to_plain_plan():
+    """mode='off' is inert — the plan drops the policy and the run is the
+    ordinary (non-grad) program, mirroring the inert-StopPolicy rule."""
+    plan = _plan(grad=GradPolicy(mode="off"))
+    assert plan.grad is None
+    res = execute(plan)
+    assert hasattr(res, "chi2_dof")  # a VegasResult, not a GradResult
+
+
+def test_plan_describe_shows_grad_axis():
+    plan = _plan(grad=GradPolicy(mode="pathwise", with_sdev=True))
+    text = plan.describe()
+    assert "grad" in text and "pathwise,with_sdev" in text
+    assert "two-phase" in text
+    off = _plan()
+    assert "grad       off" in off.describe()
+
+
+def test_execution_config_describe_shows_grad():
+    ec = ExecutionConfig(grad=GradPolicy(mode="score", with_sdev=False))
+    assert "grad[score]" in ec.describe()
+    assert "grad" not in ExecutionConfig().describe()
+
+
+def test_cli_plan_shows_grad_axis(capsys):
+    """--plan --grad pathwise prints the validated grad line and returns
+    the plan without running anything."""
+    from repro.launch.integrate import main
+    plan = main(["--integrand", "gaussian", "--neval", "1000",
+                 "--iters", "2", "--plan", "--grad", "pathwise"])
+    assert plan.grad is not None and plan.grad.mode == "pathwise"
+    out = capsys.readouterr().out
+    assert "grad" in out and "two-phase" in out
+
+
+def test_cli_rejects_grad_fused_backend():
+    from repro.launch.integrate import main
+    with pytest.raises(PlanError, match="in-kernel"):
+        main(["--integrand", "gaussian", "--neval", "1000", "--iters", "2",
+              "--plan", "--grad", "pathwise", "--backend", "pallas-fused"])

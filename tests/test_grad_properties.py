@@ -1,0 +1,111 @@
+"""Property-based tests (hypothesis) for the frozen-map change of variables
+(§11): `rescale_edges` must be a positive-jacobian, endpoint-exact affine
+remap for ANY monotone map and bounds, and the bounds-derivative of a
+constant integrand must obey the exact product-rule identity."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# Property tests need hypothesis (requirements-dev.txt); skip the module —
+# don't fail collection — where it isn't installed.
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import VegasConfig  # noqa: E402
+from repro.grad import differentiable, rescale_edges, score_surrogate  # noqa: E402
+
+TINY = VegasConfig(neval=1_000, max_it=2, ninc=16, chunk=512)
+
+
+def _edges(dim, ninc, seed, lo, hi):
+    """A random strictly-monotone map on [lo, hi] per dim (what adaptation
+    produces: sorted interior knots, pinned endpoints)."""
+    rng = np.random.default_rng(seed)
+    # Strictly positive interval widths, normalized so t spans [0, 1] with
+    # EXACT endpoints (t[:, 0] == 0, t[:, -1] == 1 by construction).
+    widths = rng.uniform(0.1, 1.0, size=(dim, ninc))
+    t = np.concatenate([np.zeros((dim, 1)), np.cumsum(widths, axis=1)], 1)
+    t = t / t[:, -1:]
+    return jnp.asarray(lo[:, None] + (hi - lo)[:, None] * t, jnp.float32)
+
+
+bounds_st = st.tuples(
+    st.integers(1, 4),                       # dim
+    st.integers(0, 10_000),                  # map seed
+    st.floats(-2.0, 1.0),                    # lower anchor
+    st.floats(0.1, 3.0),                     # width
+)
+
+
+@given(bounds_st, st.floats(-1.0, 2.0), st.floats(0.2, 2.5))
+@settings(max_examples=40, deadline=None)
+def test_rescale_edges_is_positive_jacobian_remap(spec, new_lo, new_w):
+    dim, seed, lo, w = spec
+    l0 = np.full(dim, lo, np.float32)
+    u0 = l0 + np.float32(w)
+    edges0 = _edges(dim, 8, seed, l0, u0)
+    lower = jnp.full((dim,), new_lo, jnp.float32)
+    upper = lower + jnp.float32(new_w)
+
+    out = np.asarray(rescale_edges(edges0, lower, upper))
+    # Endpoints land EXACTLY on the requested bounds (the map integrates
+    # over precisely the requested box)...
+    np.testing.assert_allclose(out[:, 0], np.asarray(lower), atol=1e-6)
+    np.testing.assert_allclose(out[:, -1], np.asarray(upper), atol=1e-6)
+    # ... every interval keeps positive width (jacobian > 0 everywhere) ...
+    assert np.all(np.diff(out, axis=1) > 0.0), out
+    # ... and relative knot positions are preserved (affine, per dim).
+    t_in = (np.asarray(edges0) - l0[:, None]) / (u0 - l0)[:, None]
+    t_out = (out - np.asarray(lower)[:, None]) / np.asarray(upper - lower)[:, None]
+    np.testing.assert_allclose(t_out, t_in, atol=2e-5)
+
+
+@given(bounds_st)
+@settings(max_examples=40, deadline=None)
+def test_rescale_edges_identity_at_own_bounds(spec):
+    dim, seed, lo, w = spec
+    l0 = np.full(dim, lo, np.float32)
+    u0 = l0 + np.float32(w)
+    edges0 = _edges(dim, 8, seed, l0, u0)
+    out = rescale_edges(edges0, jnp.asarray(l0), jnp.asarray(u0))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(edges0),
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(st.floats(0.5, 4.0), st.integers(0, 50),
+       st.floats(0.2, 1.5), st.floats(0.3, 2.0))
+@settings(max_examples=8, deadline=None)
+def test_constant_integrand_bounds_derivative_exact(c, seed, w0, w1):
+    """est(lower, upper) = c * prod(upper - lower) for a constant integrand
+    whatever the (frozen) map — so d(est)/d(upper_j) == est / width_j and
+    d(est)/d(lower_j) == -est / width_j EXACTLY (one full two-phase run per
+    example: keep max_examples small)."""
+    fn = lambda _p, x: jnp.full(x.shape[:-1], np.float32(c))
+    est = differentiable(fn, 2, (0.0, 0.0), (w0, w1), TINY, name="const")
+    key = jax.random.PRNGKey(seed)
+    lower = jnp.zeros(2, jnp.float32)
+    upper = jnp.asarray([w0, w1], jnp.float32)
+
+    val, (gl, gu) = jax.value_and_grad(
+        lambda l, u: est.pair(jnp.zeros(()), l, u, key)[0],
+        argnums=(0, 1))(lower, upper)
+    v = float(val)
+    widths = np.asarray(upper - lower)
+    assert math.isclose(v, c * widths.prod(), rel_tol=1e-4)
+    np.testing.assert_allclose(np.asarray(gu), v / widths, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(gl), -v / widths, rtol=1e-4)
+
+
+@given(st.floats(1e-3, 1e3), st.floats(-2.0, 2.0))
+@settings(max_examples=50, deadline=None)
+def test_score_surrogate_value_and_tangent(f0, df):
+    """value(surrogate) == f; tangent(surrogate) == f * d(log f) == df for
+    any positive f — the score-function identity the mode rests on."""
+    g = lambda t: score_surrogate(jnp.float32(f0) * (1.0 + t * np.float32(df)))
+    v, tangent = jax.jvp(g, (jnp.float32(0.0),), (jnp.float32(1.0),))
+    assert np.isclose(float(v), f0, rtol=1e-5)
+    assert np.isclose(float(tangent), f0 * df, rtol=1e-4, atol=1e-6)
