@@ -21,6 +21,7 @@ import time
 
 import jax
 
+from repro import kernels
 from repro.core import integrator as I
 from repro.core import fill as F
 from repro.core import map as vmap_
@@ -104,15 +105,21 @@ def run(fast=True):
     # Fill perf trajectory: P-V2 baseline vs P-V3 fused at the smoke shapes
     # (full mode adds a second n_eval decade).
     pallas_evals = [10**5] if fast else [10**5, 10**6]
+    # A BENCH_fill.json row is only comparable to rows that ran the kernel
+    # the same way: record the resolved interpret mode (platform autodetect,
+    # kernels.backend_default) in every pallas-backed fill row, so trajectory
+    # tooling never pits an interpreter number against a compiled one.
+    interp = kernels.backend_default() == "interpret"
     for name, ig in [("roos_arnold", make_roos_arnold()),
                      ("cosine_d6", make_cosine(dim=6))]:
         for ne in pallas_evals:
             t_ref, t_base, t_fused = _fill_backends(ig, ne)
             emit(f"table1/{name}/neval={ne:.0e}/fill_pallas", t_base,
-                 f"vs_ref={t_ref / t_base:.3f}x", n_eval=ne, backend="pallas")
+                 f"vs_ref={t_ref / t_base:.3f}x", n_eval=ne, backend="pallas",
+                 interpret=interp)
             emit(f"table1/{name}/neval={ne:.0e}/fill_fused", t_fused,
                  f"speedup_vs_pallas={t_base / t_fused:.2f}x",
-                 n_eval=ne, backend="pallas_fused")
+                 n_eval=ne, backend="pallas_fused", interpret=interp)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,149 @@
+"""Load generator for the sweep service (ISSUE 7, DESIGN.md §12):
+requests/sec at a fixed precision target, coalesced micro-batching vs
+serial per-request execution of the SAME burst.
+
+The claim to reproduce: a burst of small compatible requests is
+overhead-bound — per-request dispatch (trace lookup, host round-trips,
+B-1 extra program launches) dominates the device work — so coalescing the
+burst into ONE vmapped program beats running each request alone.  The
+serial baseline is the service itself at ``max_batch=1`` (same admission,
+same program cache, same billing — the ONLY difference is coalescing), so
+the ratio isolates the micro-batcher.
+
+Standalone (the CI serve-smoke job drives this):
+
+  PYTHONPATH=src python -m benchmarks.bench_serve --burst 8 \
+      --out BENCH_serve.json --check
+
+``--check`` asserts every request met its precision target or was stopped
+by its time budget, and that the coalesced burst beat the serial one.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from .common import emit, git_sha
+
+# The serving shape: many SMALL requests (the overhead-bound regime where
+# coalescing pays — per-request planning/dispatch dominates device work),
+# with a precision target every scenario meets at the same iteration.  A
+# target lanes meet at DIFFERENT iterations would charge the coalesced
+# batch the worst lane's trip count (masked no-op iterations still burn
+# compute on one core) — that regime needs lane-parallel hardware, where
+# the vmapped program wins on throughput instead.
+RTOL = 0.2
+KW = dict(neval=500, max_it=8, ninc=32, chunk=500)
+
+
+def _burst(n: int, seed0: int = 0):
+    """n compatible single-scenario requests: one class, distinct params,
+    per-request RNG streams; the back half carries a (generous) wall-clock
+    budget so the budget path is exercised under load."""
+    from repro.serve import IntegrationRequest
+    return [IntegrationRequest(
+        family="gaussian",
+        params=[0.2 + 0.6 * i / max(n - 1, 1)],
+        rtol=RTOL, seed=seed0 + i,
+        time_budget_s=(60.0 if i >= n // 2 else None),
+        **KW) for i in range(n)]
+
+
+def _serve_burst(n: int, max_batch: int, repeats: int = 2):
+    """Serve the n-request burst through a fresh service; best-of-repeats
+    wall clock AFTER a same-shape warm-up burst (trace+compile excluded,
+    exactly what a long-lived service amortizes)."""
+    from repro.serve import SweepService
+    svc = SweepService(max_batch=max_batch)
+    for r in _burst(n, seed0=10_000):
+        svc.submit(r)
+    svc.drain()
+    wall, results = float("inf"), None
+    for rep in range(repeats):
+        reqs = _burst(n, seed0=1 + rep * n)
+        t0 = time.perf_counter()
+        tickets = [svc.submit(r) for r in reqs]
+        svc.drain()
+        results = [t.result(0) for t in tickets]
+        wall = min(wall, time.perf_counter() - t0)
+    return wall, results, svc.stats()
+
+
+def _met(r) -> bool:
+    """A served request is within SLA if it hit its precision target or
+    its time budget stopped it first."""
+    if r.met_precision is not None and bool(r.met_precision.all()):
+        return True
+    return r.capped
+
+
+def _bench_burst(n: int):
+    """Serve one n-request burst both ways and emit the two rows.
+    Returns ``(speedup, wall_coalesced, wall_serial, results)``."""
+    wall_c, res_c, stats_c = _serve_burst(n, max_batch=n)
+    wall_s, res_s, stats_s = _serve_burst(n, max_batch=1)
+    speedup = wall_s / wall_c
+    emit(f"serve/burst={n}/coalesced", wall_c,
+         f"speedup={speedup:.2f}x req_per_s={n / wall_c:.1f}",
+         n_requests=n, max_batch=n, backend="ref", rtol=RTOL,
+         requests_per_s=round(n / wall_c, 2),
+         mean_occupancy=stats_c["batches"]["mean_occupancy"],
+         met_sla=sum(_met(r) for r in res_c))
+    emit(f"serve/burst={n}/serial", wall_s,
+         f"req_per_s={n / wall_s:.1f}",
+         n_requests=n, max_batch=1, backend="ref", rtol=RTOL,
+         requests_per_s=round(n / wall_s, 2),
+         mean_occupancy=stats_s["batches"]["mean_occupancy"],
+         met_sla=sum(_met(r) for r in res_s))
+    return speedup, wall_c, wall_s, res_c + res_s
+
+
+def run(fast=True):
+    for n in (16,) if fast else (8, 16, 32):
+        _bench_burst(n)
+
+
+def main(argv=None) -> None:
+    from .common import ROWS, reset_rows
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--burst", type=int, default=16)
+    ap.add_argument("--out", default=None, metavar="BENCH_serve.json")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless every request met its "
+                         "precision target or time budget AND the "
+                         "coalesced burst beat the serial one")
+    args = ap.parse_args(argv)
+
+    reset_rows()
+    speedup, wall_c, wall_s, results = _bench_burst(args.burst)
+
+    if args.out:
+        import jax
+        with open(args.out, "w") as f:
+            json.dump({"git_sha": git_sha(), "jax_version": jax.__version__,
+                       "jax_backend": jax.default_backend(),
+                       "rows": list(ROWS)}, f, indent=1)
+        print(f"# wrote {args.out}", file=sys.stderr)
+
+    if args.check:
+        missed = [r for r in results if not _met(r)]
+        for r in missed:
+            print(f"CHECK: {r!r} met neither precision nor budget",
+                  file=sys.stderr)
+        if missed:
+            sys.exit(2)
+        if speedup <= 1.0:
+            print(f"CHECK: coalesced burst ({wall_c * 1e3:.0f}ms) not "
+                  f"faster than serial ({wall_s * 1e3:.0f}ms)",
+                  file=sys.stderr)
+            sys.exit(2)
+        print(f"# serve check OK: {len(results)} requests in SLA, "
+              f"coalesced {speedup:.2f}x over serial", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,11 +9,13 @@ uses paper-scale parameters.
 
 ``--json OUT.json`` additionally writes every row as a structured record
 (name, us_per_call, derived, n_eval, backend where known) plus run metadata
-(git sha, jax version/backend, mode) — and extracts two trajectory
+(git sha, jax version/backend, mode) — and extracts three trajectory
 artifacts next to it: the fill rows into ``BENCH_fill.json`` (the kernel
-trajectory DESIGN.md §7 tracks across PRs) and the end-to-end ``run/*``
-rows into ``BENCH_run.json`` (whole-run wall clock per backend,
-benchmarks/bench_runs.py).
+trajectory DESIGN.md §7 tracks across PRs), the end-to-end ``run/*`` rows
+into ``BENCH_run.json`` (whole-run wall clock per backend,
+benchmarks/bench_runs.py), and the ``serve/*`` rows into
+``BENCH_serve.json`` (service requests/sec at fixed precision,
+benchmarks/bench_serve.py).
 
 ``--gate-fill`` turns the P-V2 vs P-V3 comparison into a regression gate:
 exit nonzero if any ``fill_fused`` row is slower than its ``fill_pallas``
@@ -39,6 +41,11 @@ def run_rows(rows: list[dict]) -> list[dict]:
     return [r for r in rows if r["name"].startswith("run/")]
 
 
+def serve_rows(rows: list[dict]) -> list[dict]:
+    """The serving-throughput subset: requests/sec rows (bench_serve.py)."""
+    return [r for r in rows if r["name"].startswith("serve/")]
+
+
 def gate_fill(rows: list[dict]) -> list[str]:
     """Pair each fused fill row with its baseline-pallas twin; return a
     failure message per pair where fused is slower."""
@@ -50,6 +57,10 @@ def gate_fill(rows: list[dict]) -> list[str]:
             continue
         twin = base.get(r["name"].replace("/fill_fused", ""))
         if twin is None:
+            continue
+        if r.get("interpret") != twin.get("interpret"):
+            # Interpreter vs compiled-Mosaic timings are different universes;
+            # comparing across modes gates nothing real.
             continue
         if r["us_per_call"] > twin["us_per_call"]:
             failures.append(
@@ -73,7 +84,8 @@ def main() -> None:
 
     from . import (bench_applications, bench_batch, bench_breakdown,
                    bench_grad, bench_integrands, bench_multidevice,
-                   bench_runs, bench_scaling, bench_stratification)
+                   bench_runs, bench_scaling, bench_serve,
+                   bench_stratification)
     from . import common
 
     suites = {
@@ -86,6 +98,7 @@ def main() -> None:
         "batch": bench_batch,
         "run": bench_runs,
         "grad": bench_grad,
+        "serve": bench_serve,
     }
     common.reset_rows()
     print("name,us_per_call,derived")
@@ -114,7 +127,8 @@ def main() -> None:
         out_dir = os.path.dirname(os.path.abspath(args.json))
         wrote = [args.json]
         for fname, subset in [("BENCH_fill.json", fill_rows(common.ROWS)),
-                              ("BENCH_run.json", run_rows(common.ROWS))]:
+                              ("BENCH_run.json", run_rows(common.ROWS)),
+                              ("BENCH_serve.json", serve_rows(common.ROWS))]:
             if not subset:
                 continue
             path = os.path.join(out_dir, fname)

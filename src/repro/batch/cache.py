@@ -11,8 +11,18 @@ batch run with them — the serving-style amortization the batch engine's
 Storage is an in-memory dict with optional ``.npz`` persistence (same
 plain-numpy-inspectable philosophy as ``dist.checkpoint``).  Entries are
 per-scenario ``(B, d, ninc+1)`` arrays; the key pins family name, batch
-size, and every config field that changes map geometry or adaptation, so a
-hit is always shape- and semantics-compatible.
+size, accumulation dtype, and every config field that changes map geometry
+or adaptation, so a hit is always shape- and semantics-compatible.
+
+Multi-writer safety: several processes (a sweep service and a CLI sweep,
+or two services) may share one cache path.  Each flush RELOADS the on-disk
+file and merges it with this writer's own entries before the atomic
+``os.replace`` — a writer can only ever overwrite the keys it itself wrote,
+never silently drop another writer's entries (the lost-update bug the
+init-snapshot rewrite had).  Last-writer-wins per key is the intended
+semantics; the window between reload and replace is not locked, so two
+simultaneous flushes of the SAME key race benignly (either converged map is
+a valid warm start).
 """
 
 from __future__ import annotations
@@ -24,9 +34,16 @@ import numpy as np
 
 
 def cache_key(family, rcfg) -> str:
-    """Cache key pinning family identity + map-relevant config fields."""
+    """Cache key pinning family identity + map-relevant config fields.
+
+    ``dtype`` is part of the key: edges adapted under f64 accumulation are
+    not the same map as the f32 run's (different rounding all the way down
+    the adaptation), and before the pin a ``get()`` would silently cast a
+    stored f64 map into an f32 plan (and vice versa).
+    """
     return (f"{family.name}.B{family.batch_size}.d{rcfg.dim}"
-            f".ninc{rcfg.ninc}.ns{rcfg.nstrat}.a{rcfg.alpha}.b{rcfg.beta}")
+            f".ninc{rcfg.ninc}.ns{rcfg.nstrat}.a{rcfg.alpha}.b{rcfg.beta}"
+            f".dt{jnp.dtype(rcfg.dtype).name}")
 
 
 class MapCache:
@@ -35,9 +52,9 @@ class MapCache:
     def __init__(self, path: str | None = None):
         self.path = path
         self._mem: dict[str, np.ndarray] = {}
+        self._dirty: set[str] = set()  # keys THIS writer wrote since flush
         if path is not None and os.path.exists(path):
-            with np.load(path) as z:
-                self._mem = {k: z[k] for k in z.files}
+            self._mem = self._load_disk()
 
     def __len__(self) -> int:
         return len(self._mem)
@@ -55,15 +72,38 @@ class MapCache:
         arr = np.asarray(edges)
         expected = (family.batch_size, rcfg.dim, rcfg.ninc + 1)
         assert arr.shape == expected, (arr.shape, expected)
-        self._mem[cache_key(family, rcfg)] = arr
+        key = cache_key(family, rcfg)
+        self._mem[key] = arr
+        self._dirty.add(key)
         if self.path is not None:
             self._flush()
 
+    def _load_disk(self) -> dict[str, np.ndarray]:
+        try:
+            with np.load(self.path) as z:
+                return {k: z[k] for k in z.files}
+        except Exception:
+            # os.replace keeps the file complete-or-absent; an unreadable
+            # file means external corruption — start from empty rather than
+            # refuse every flush forever.
+            return {}
+
     def _flush(self) -> None:
+        # Reload-and-merge: concurrent writers sharing this path may have
+        # added entries since our init snapshot — take the disk state as
+        # the base and overlay only the keys WE wrote, so their entries
+        # survive our flush (and their fresher value of a key we did not
+        # touch wins over our stale snapshot).
+        disk = self._load_disk() if os.path.exists(self.path) else {}
+        disk.update({k: self._mem[k] for k in self._dirty})
+        self._mem = disk
         # Atomic write, same pattern as dist.checkpoint: complete or absent.
-        tmp = self.path + ".tmp"
+        # The tmp name is per-process so two concurrent flushes never
+        # interleave bytes in one staging file.
+        tmp = f"{self.path}.{os.getpid()}.tmp"
         with open(tmp, "wb") as f:
             np.savez(f, **self._mem)
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, self.path)
+        self._dirty.clear()

@@ -254,7 +254,7 @@ def combine_results(results: jax.Array, skip: int, n_done: int):
 
 def run_loop(state: VegasState, integrand: Integrand, cfg: ResolvedConfig,
              start: int, fill_fn=None, *, stop=None,
-             stop_sync=None) -> VegasState:
+             stop_sync=None, it_cap=None) -> VegasState:
     """The ADAPT phase: the whole iteration loop as one traced program.
 
     Fixed-length mode (no active stop policy): ``lax.fori_loop`` over
@@ -285,10 +285,22 @@ def run_loop(state: VegasState, integrand: Integrand, cfg: ResolvedConfig,
     (`engine.sharding.make_stop_sync`): every shard computes the identical
     replicated statistics, and the explicit all-agree reduction guarantees
     the loop cannot diverge across devices.
+
+    ``it_cap`` (optional, §12) is the time-budget stopping input: a traced
+    iteration-count cap — the serving layer derives it from a request's
+    wall-clock budget and the measured per-iteration cost.  It rides the
+    while_loop carry next to the running stats, so the loop exits at
+    ``it >= min(max_it, it_cap)`` even when no precision target is set (a
+    budget-only run still uses the while_loop), and under ``vmap`` a
+    per-scenario cap array gives every lane its own budget.  The cap is a
+    HARD ceiling: it wins over ``min_it`` (a spent budget must stop the run
+    even if the policy would rather keep adapting).
     """
     if stop is None:
         stop = getattr(cfg.execution, "stop", None)
-    if stop is None or not stop.active:
+    if stop is not None and not stop.active:
+        stop = None
+    if stop is None and it_cap is None:
         return jax.lax.fori_loop(
             start, cfg.max_it,
             lambda _, s: iteration_step(s, integrand, cfg, fill_fn), state)
@@ -297,27 +309,31 @@ def run_loop(state: VegasState, integrand: Integrand, cfg: ResolvedConfig,
         mean, sdev, chi2_dof, _ = combine_results(s.results, cfg.skip, s.it)
         return mean, sdev, chi2_dof
 
-    def wants_more(s, stats):
+    def wants_more(s, stats, cap):
         mean, sdev, _ = stats
-        cont = (s.it < cfg.max_it) & ~stop.converged(mean, sdev, s.it)
+        cont = s.it < jnp.minimum(cfg.max_it, cap)
+        if stop is not None:
+            cont = cont & ~stop.converged(mean, sdev, s.it)
         if stop_sync is not None:
             cont = stop_sync(cont)
         return cont
 
-    # The running stats ride the carry next to the continue flag: cond
-    # reads only the flag (the decision is made in the body, where
-    # stop_sync can psum it), while the carried (mean, sdev, chi2_dof)
-    # keep the §10 contract that the stop statistics live alongside the
-    # state — inspectable mid-loop and re-derivable on resume.
+    # The running stats and the iteration cap ride the carry next to the
+    # continue flag: cond reads only the flag (the decision is made in the
+    # body, where stop_sync can psum it), while the carried (mean, sdev,
+    # chi2_dof) keep the §10 contract that the stop statistics live
+    # alongside the state — inspectable mid-loop and re-derivable on resume.
+    cap = jnp.asarray(cfg.max_it if it_cap is None else it_cap, jnp.int32)
+
     def body(carry):
-        s, _, _ = carry
+        s, _, cap, _ = carry
         s = iteration_step(s, integrand, cfg, fill_fn)
         stats = running_stats(s)
-        return s, stats, wants_more(s, stats)
+        return s, stats, cap, wants_more(s, stats, cap)
 
     stats0 = running_stats(state)
-    carry = (state, stats0, wants_more(state, stats0))
-    state, _, _ = jax.lax.while_loop(lambda c: c[2], body, carry)
+    carry = (state, stats0, cap, wants_more(state, stats0, cap))
+    state, _, _, _ = jax.lax.while_loop(lambda c: c[3], body, carry)
     return state
 
 

@@ -43,7 +43,8 @@ from .plan import Plan
 
 
 def execute(plan: Plan, *, key=None, state: core.VegasState | None = None,
-            cache=None, fill_fn=None, checkpoint_cb=None):
+            cache=None, fill_fn=None, checkpoint_cb=None, keys=None,
+            it_caps=None, edges0=None):
     """Run a plan.
 
     ``key`` defaults to ``PRNGKey(0)``.  ``state`` resumes a single-scenario
@@ -53,6 +54,20 @@ def execute(plan: Plan, *, key=None, state: core.VegasState | None = None,
     integrand)`` — the legacy `core.run` extension hook `repro.dist` built
     on; prefer expressing sharding through the plan.  ``checkpoint_cb``
     overrides the plan's checkpoint policy callback.
+
+    Serving hooks (§12, used by `repro.serve`):
+
+      * ``keys`` — explicit per-scenario base keys ``(B, ...)`` for a
+        batched family plan, replacing the default ``fold_in(key, b)``
+        derivation (`batch.engine.scenario_keys`).  A coalesced micro-batch
+        keeps every request's own stream this way, so results are invariant
+        to how requests were batched together.
+      * ``it_caps`` — the time-budget stopping input: an iteration-count
+        cap (scalar for single runs, per-scenario ``(B,)`` for batched
+        runs) threaded into the while_loop carry (`core.run_loop`).
+      * ``edges0`` — explicit warm-start importance maps ``(B, d, ninc+1)``
+        for a batched family plan (mutually exclusive with ``cache``; the
+        serving layer pools maps across batch sizes itself).
 
     Returns `VegasResult` (single scenario), `BatchResult` (vmapped family),
     or ``list[VegasResult]`` (``batch='serial'`` family).
@@ -65,10 +80,11 @@ def execute(plan: Plan, *, key=None, state: core.VegasState | None = None,
         # (resume state, warm-start cache, fill/checkpoint overrides)
         # compose with a custom-AD boundary.
         if (state is not None or cache is not None or fill_fn is not None
-                or checkpoint_cb is not None):
+                or checkpoint_cb is not None or keys is not None
+                or it_caps is not None or edges0 is not None):
             raise ValueError(
-                "a grad plan takes no state/cache/fill_fn/checkpoint_cb "
-                "hooks; drop the GradPolicy or the hook")
+                "a grad plan takes no state/cache/fill_fn/checkpoint_cb/"
+                "keys/it_caps/edges0 hooks; drop the GradPolicy or the hook")
         from repro.grad.api import execute_grad
         return execute_grad(plan, key)
     if plan.is_family:
@@ -81,16 +97,21 @@ def execute(plan: Plan, *, key=None, state: core.VegasState | None = None,
                 "sharding and checkpointing for family runs through "
                 "ExecutionConfig (mesh=..., checkpoint=...)")
         if plan.batched:
-            return _execute_family_vmap(plan, key, cache)
-        if cache is not None:
-            raise ValueError("the warm-start cache applies to the vmapped "
+            if cache is not None and edges0 is not None:
+                raise ValueError("cache and edges0 are two spellings of the "
+                                 "same warm start — pass one")
+            return _execute_family_vmap(plan, key, cache, keys=keys,
+                                        it_caps=it_caps, edges0=edges0)
+        if cache is not None or keys is not None or edges0 is not None:
+            raise ValueError("cache/keys/edges0 apply to the vmapped "
                              "batch program; this plan resolved to "
                              "batch='serial'")
-        return _execute_family_serial(plan, key)
-    if cache is not None:
-        raise ValueError("the warm-start cache is a family feature; "
+        return _execute_family_serial(plan, key, it_caps=it_caps)
+    if cache is not None or keys is not None or edges0 is not None:
+        raise ValueError("cache/keys/edges0 are family features; "
                          "single-scenario runs resume from state instead")
-    return _execute_single(plan, key, state, fill_fn, checkpoint_cb)
+    return _execute_single(plan, key, state, fill_fn, checkpoint_cb,
+                           it_cap=it_caps)
 
 
 # --- single scenario ---------------------------------------------------------
@@ -108,8 +129,14 @@ def _plan_fill_fn(plan: Plan, *, local: bool = False):
     return backends_mod.bind_fill(plan.cfg, backend=plan.backend.name)
 
 
-def _execute_single(plan: Plan, key, state, fill_fn, checkpoint_cb):
+def _execute_single(plan: Plan, key, state, fill_fn, checkpoint_cb,
+                    it_cap=None):
     cfg, integrand = plan.cfg, plan.workload
+    if it_cap is not None and jnp.ndim(it_cap) != 0:
+        raise ValueError(
+            f"a single-scenario run takes a scalar it_cap, got shape "
+            f"{jnp.shape(it_cap)} (per-scenario caps are a batched-family "
+            f"feature)")
     if fill_fn is None:
         fill_fn = _plan_fill_fn(plan)
     if checkpoint_cb is None and plan.checkpoint is not None:
@@ -139,16 +166,19 @@ def _execute_single(plan: Plan, key, state, fill_fn, checkpoint_cb):
     start = int(state.it)
     if checkpoint_cb is None:
         # On-device loop: one jitted program for the whole run (fori_loop,
-        # or the stop policy's fixed-shape while_loop).
+        # or the stop policy's / iteration cap's fixed-shape while_loop).
         prog = jax.jit(functools.partial(
             core.run_loop, integrand=integrand, cfg=cfg, start=start,
             fill_fn=fill_fn, stop=plan.stop), donate_argnums=0)
-        state = prog(state)
+        kw = ({} if it_cap is None
+              else {"it_cap": jnp.asarray(it_cap, jnp.int32)})
+        state = prog(state, **kw)
     else:
         step = jax.jit(functools.partial(
             core.iteration_step, integrand=integrand, cfg=cfg,
             fill_fn=fill_fn), donate_argnums=0)
-        for it in range(start, cfg.max_it):
+        end = cfg.max_it if it_cap is None else min(cfg.max_it, int(it_cap))
+        for it in range(start, end):
             state = step(state)
             jax.block_until_ready(state.results)
             checkpoint_cb(it, state)
@@ -165,17 +195,27 @@ def _execute_single(plan: Plan, key, state, fill_fn, checkpoint_cb):
 
 # --- batched family ----------------------------------------------------------
 
-def _execute_family_vmap(plan: Plan, key, cache):
+def uniform_family_edges(family, cfg, b: int):
+    """The cold-start importance maps: the family's uniform map broadcast
+    over the scenario axis ``(b, d, ninc+1)``."""
+    uni = vmap_.uniform_edges(family.lower, family.upper, cfg.ninc,
+                              jnp.dtype(cfg.dtype))
+    return jnp.broadcast_to(uni, (b,) + uni.shape)
+
+
+def make_family_program(plan: Plan, *, with_caps: bool = False):
+    """Build the jitted vmapped whole-run program of a batched family plan.
+
+    Returns ``prog(params, keys, edges0[, it_caps]) -> (states, mean, sdev,
+    chi2_dof, n_used)`` with every per-scenario input carried on axis 0.
+    The callable is shape-polymorphic over the batch size (jit retraces per
+    B), so a long-lived caller — the serving layer's micro-batcher (§12) —
+    caches ONE program per compatibility class and reuses it across bursts
+    instead of paying trace+compile on every batch.  ``with_caps=True``
+    threads a per-scenario iteration cap ``(B,)`` into the while_loop carry
+    (the time-budget stopping input, `core.run_loop`).
+    """
     family, cfg = plan.workload, plan.cfg
-    b = plan.batch_size
-
-    edges0 = cache.get(family, cfg) if cache is not None else None
-    warm = edges0 is not None
-    if edges0 is None:
-        uni = vmap_.uniform_edges(family.lower, family.upper, cfg.ninc,
-                                  jnp.dtype(cfg.dtype))
-        edges0 = jnp.broadcast_to(uni, (b,) + uni.shape)
-
     fill_fn = _plan_fill_fn(plan, local=True)
     # Per-scenario stop masks come from vmapping the while_loop itself
     # (converged lanes keep their old carry); under the sharded batched
@@ -184,42 +224,85 @@ def _execute_family_vmap(plan: Plan, key, cache):
     stop_sync = (sharding_mod.make_stop_sync(plan.shard_axes)
                  if plan.stop is not None and plan.n_shards > 1 else None)
 
-    def one(params, key_b, edges0_b):
+    def one(params, key_b, edges0_b, cap_b=None):
         ig = family.bind(params)
         st = core.init_state(ig, cfg, key_b)
         st = core.VegasState(edges0_b, st.n_h, st.key, st.it, st.results)
         st = core.run_loop(st, ig, cfg, 0, fill_fn=fill_fn, stop=plan.stop,
-                           stop_sync=stop_sync)
+                           stop_sync=stop_sync, it_cap=cap_b)
         mean, sdev, chi2_dof, n_used = core.combine_results(
             st.results, cfg.skip, st.it)
         return st, mean, sdev, chi2_dof, n_used
 
-    batched = jax.vmap(one)
+    n_args = 4 if with_caps else 3
+    batched = jax.vmap(one if with_caps
+                       else lambda p, k, e: one(p, k, e))
     if plan.n_shards > 1:
         # ONE shard_map around the ENTIRE vmapped run: the per-shard fill +
         # psum runs inside the scenario vmap, every device carries the full
         # replicated O(B·KB) adaptation state, and the fill's chunk axis is
         # divided per scenario.  B integrands × D devices, one XLA program.
-        batched = sharding_mod.replicated_shard_map(batched, plan.mesh, 3)
-    prog = jax.jit(batched)
-    states, mean, sdev, chi2_dof, n_used = prog(
-        family.params, scenario_keys(key, b), edges0)
+        batched = sharding_mod.replicated_shard_map(batched, plan.mesh,
+                                                    n_args)
+    return jax.jit(batched)
 
-    if cache is not None:
-        cache.put(family, cfg, states.edges)
 
-    # iter_sdevs keeps the buffer's inf sentinels past each scenario's
-    # n_it_used slot — consumers filter on n_it_used (combine_results
-    # already did, per scenario, via its n_done mask).
+def package_batch_result(states, mean, sdev, chi2_dof, n_used, *,
+                         warm_started: bool = False) -> BatchResult:
+    """Package a family program's device outputs into a `BatchResult`.
+
+    iter_sdevs keeps the buffer's inf sentinels past each scenario's
+    n_it_used slot — consumers filter on n_it_used (combine_results
+    already did, per scenario, via its n_done mask).
+    """
     sig2 = np.asarray(states.results[:, :, 1])
     return BatchResult(np.asarray(mean), np.asarray(sdev),
                        np.asarray(chi2_dof), np.asarray(n_used),
                        np.asarray(states.it, dtype=np.int64),
                        np.asarray(states.results[:, :, 0]), np.sqrt(sig2),
-                       states, warm_started=warm)
+                       states, warm_started=warm_started)
 
 
-def _execute_family_serial(plan: Plan, key):
+def _execute_family_vmap(plan: Plan, key, cache, *, keys=None, it_caps=None,
+                         edges0=None):
+    family, cfg = plan.workload, plan.cfg
+    b = plan.batch_size
+
+    if edges0 is None and cache is not None:
+        edges0 = cache.get(family, cfg)
+    warm = edges0 is not None
+    if edges0 is None:
+        edges0 = uniform_family_edges(family, cfg, b)
+    edges0 = jnp.asarray(edges0)
+    if edges0.shape[0] != b:
+        raise ValueError(f"edges0 carries {edges0.shape[0]} scenarios, the "
+                         f"plan has {b}")
+
+    if keys is None:
+        keys = scenario_keys(key, b)
+    elif jnp.shape(keys)[0] != b:
+        raise ValueError(f"keys carries {jnp.shape(keys)[0]} scenarios, the "
+                         f"plan has {b}")
+
+    args = [family.params, keys, edges0]
+    if it_caps is not None:
+        caps = jnp.asarray(it_caps, jnp.int32)
+        if caps.ndim == 0:
+            caps = jnp.full((b,), caps, jnp.int32)
+        elif caps.shape != (b,):
+            raise ValueError(f"it_caps shape {caps.shape} != ({b},)")
+        args.append(caps)
+
+    prog = make_family_program(plan, with_caps=it_caps is not None)
+    states, mean, sdev, chi2_dof, n_used = prog(*args)
+
+    if cache is not None:
+        cache.put(family, cfg, states.edges)
+    return package_batch_result(states, mean, sdev, chi2_dof, n_used,
+                                warm_started=warm)
+
+
+def _execute_family_serial(plan: Plan, key, it_caps=None):
     """The B scenarios as B independent single-scenario executions (the
     baseline the vmapped program is measured against; same per-scenario
     keys, so the streams match the batched run exactly)."""
@@ -229,6 +312,8 @@ def _execute_family_serial(plan: Plan, key):
         single = dataclasses.replace(plan, workload=family.instance(b),
                                      is_family=False, batched=False,
                                      batch_size=1)
+        cap = (None if it_caps is None else
+               np.broadcast_to(np.asarray(it_caps), (family.batch_size,))[b])
         out.append(_execute_single(single, jax.random.fold_in(key, b),
-                                   None, None, None))
+                                   None, None, None, it_cap=cap))
     return out

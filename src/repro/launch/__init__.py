@@ -1,1 +1,2 @@
-"""Launchers: mesh construction + the integrate/sweep CLI entry points."""
+"""Launchers: mesh construction + the integrate/sweep/serve CLI entry
+points."""

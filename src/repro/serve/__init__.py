@@ -1,0 +1,32 @@
+"""repro.serve: integration-as-a-service on the unified engine (§12).
+
+A long-lived :class:`SweepService` admits :class:`IntegrationRequest`s
+through ``make_plan`` (invalid combinations rejected with `PlanError`
+before touching a device), coalesces compatible queued requests into ONE
+vmapped program with per-scenario stop masks and time-budget iteration
+caps, warm-starts from a shared `MapCache`, and bills each request by its
+own ``n_it_used``.
+
+    from repro.serve import IntegrationRequest, SweepService
+
+    with SweepService(max_batch=16) as svc:
+        t = svc.submit(IntegrationRequest(
+            family="gaussian", params=[0.3, 0.5], rtol=5e-3,
+            time_budget_s=2.0, seed=7))
+        print(t.result(timeout=60.0))
+    print(svc.stats())
+"""
+
+from .metrics import ServeMetrics
+from .request import IntegrationRequest, RequestResult, Ticket
+from .service import SERVED_FAMILIES, ServedFamily, SweepService
+
+__all__ = [
+    "IntegrationRequest",
+    "RequestResult",
+    "Ticket",
+    "ServeMetrics",
+    "ServedFamily",
+    "SERVED_FAMILIES",
+    "SweepService",
+]

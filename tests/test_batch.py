@@ -113,3 +113,72 @@ def test_warm_start_edges_are_the_converged_maps():
     np.testing.assert_allclose(np.asarray(stored),
                                np.asarray(r1.states.edges), rtol=1e-6)
     assert (jnp.diff(stored, axis=-1) > 0).all()  # still a valid map
+
+
+def test_map_cache_concurrent_writers_merge(tmp_path):
+    """Two writers sharing one cache path (a service + a CLI sweep) must
+    not drop each other's entries: each flush reloads the on-disk state
+    and overlays only its own dirty keys (the lost-update regression)."""
+    path = str(tmp_path / "shared.npz")
+    fam_a = make_gaussian_family(np.array([0.3, 0.7]))
+    fam_b = make_gaussian_family(np.array([0.2, 0.5, 0.8]))  # other key (B)
+    # Both writers snapshot the (absent) file BEFORE either flushes — the
+    # exact interleaving that lost writer A's entry under the old
+    # rewrite-from-init-snapshot flush.
+    writer_a = MapCache(path)
+    writer_b = MapCache(path)
+    run_batch(fam_a, FAST, key=jax.random.PRNGKey(1), cache=writer_a)
+    run_batch(fam_b, FAST, key=jax.random.PRNGKey(2), cache=writer_b)
+
+    merged = MapCache(path)
+    assert len(merged) == 2
+    rcfg = FAST.resolve(fam_a.dim)
+    assert merged.get(fam_a, rcfg) is not None
+    assert merged.get(fam_b, FAST.resolve(fam_b.dim)) is not None
+
+    # And writer_b itself picked up A's entry at flush time (merge, not
+    # blind overwrite).
+    assert writer_b.get(fam_a, rcfg) is not None
+
+
+def test_map_cache_flush_overwrites_own_keys_only(tmp_path):
+    """A writer's flush updates the keys it wrote and leaves a concurrent
+    writer's FRESHER value of an untouched key alone (its own init
+    snapshot of that key is stale, not authoritative)."""
+    import dataclasses as _dc
+
+    path = str(tmp_path / "shared2.npz")
+    fam = make_gaussian_family(np.array([0.3, 0.7]))
+    rcfg = FAST.resolve(fam.dim)
+    shape = (fam.batch_size, fam.dim, rcfg.ninc + 1)
+
+    seed = MapCache(path)
+    seed.put(fam, rcfg, np.full(shape, 1.0))
+    stale = MapCache(path)          # snapshots value 1.0
+    fresh = MapCache(path)
+    fresh.put(fam, rcfg, np.full(shape, 2.0))  # concurrent update
+
+    other = _dc.replace(FAST, ninc=32).resolve(fam.dim)
+    stale.put(fam, other, np.full((fam.batch_size, fam.dim, 33), 3.0))
+
+    disk = MapCache(path)
+    # stale's flush wrote its own new key but did NOT roll fam@FAST back
+    # to its 1.0 snapshot.
+    assert float(np.asarray(disk.get(fam, rcfg))[0, 0, 0]) == 2.0
+    assert disk.get(fam, other) is not None
+
+
+def test_map_cache_key_pins_dtype():
+    """f64-adapted edges are not an f32 map: dtype is part of the key, so
+    a run under the other accumulation dtype misses instead of silently
+    casting."""
+    import dataclasses as _dc
+
+    fam = make_gaussian_family(np.array([0.3, 0.7]))
+    rcfg32 = FAST.resolve(fam.dim)
+    rcfg64 = _dc.replace(FAST, dtype="float64").resolve(fam.dim)
+    cache = MapCache()
+    cache.put(fam, rcfg32, np.zeros((fam.batch_size, fam.dim,
+                                     rcfg32.ninc + 1), np.float32))
+    assert cache.get(fam, rcfg64) is None
+    assert cache.get(fam, rcfg32) is not None

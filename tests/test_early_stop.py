@@ -310,3 +310,91 @@ def test_vegas_result_prefix_fields_exclude_sentinels():
     assert r.iter_sdevs.shape == (r.n_it_used,)
     assert np.isfinite(np.asarray(r.iter_sdevs)).all()
     assert np.isfinite(r.mean) and np.isfinite(r.sdev)
+
+
+# --- time-budget iteration caps (§12) ----------------------------------------
+
+def test_it_cap_truncates_single_run_bitwise():
+    """A capped run is the fixed run stopped early: the executed prefix is
+    bit-identical, the slots past the cap keep their init sentinels."""
+    ig = igs.make_cosine(dim=3)
+    plan = E.make_plan(ig, VegasConfig(**KW))
+    full = E.execute(plan, key=KEY)
+    capped = E.execute(plan, key=KEY, it_caps=3)
+    assert capped.n_it_used == 3
+    np.testing.assert_array_equal(np.asarray(capped.state.results[:3]),
+                                  np.asarray(full.state.results[:3]))
+    np.testing.assert_array_equal(
+        np.asarray(capped.state.results[3:, 1]),
+        np.full(KW["max_it"] - 3, np.inf, np.float32))
+
+
+def test_it_cap_is_a_hard_ceiling_over_min_it():
+    """A spent budget stops the run even where the stop policy's min_it
+    would rather keep adapting."""
+    ig = igs.make_cosine(dim=2)
+    plan = E.make_plan(ig, _stop_cfg(rtol=1e-6, min_it=5))
+    r = E.execute(plan, key=KEY, it_caps=2)
+    assert r.n_it_used == 2
+
+
+def test_it_cap_above_max_it_is_inert():
+    ig = igs.make_cosine(dim=2)
+    plan = E.make_plan(ig, VegasConfig(**KW))
+    r = E.execute(plan, key=KEY, it_caps=KW["max_it"] + 50)
+    assert r.n_it_used == KW["max_it"]
+    np.testing.assert_array_equal(np.asarray(r.state.results),
+                                  np.asarray(E.execute(plan,
+                                                       key=KEY).state.results))
+
+
+def test_batched_per_scenario_caps():
+    """Each lane gets its own budget: per-scenario caps ride the vmapped
+    while_loop carry, and every executed prefix matches the uncapped run
+    bitwise."""
+    fam = make_hetero_gaussian(SIGMAS)
+    cfg = VegasConfig(execution=E.ExecutionConfig(batch="vmap"), **BKW)
+    plan = E.make_plan(fam, cfg)
+    caps = np.array([2, 5, 3, BKW["max_it"]], np.int32)
+    res = E.execute(plan, key=BKEY, it_caps=caps)
+    np.testing.assert_array_equal(res.n_it_used, caps)
+    full = E.execute(plan, key=BKEY)
+    for b, c in enumerate(caps):
+        np.testing.assert_array_equal(
+            np.asarray(res.states.results[b, :c]),
+            np.asarray(full.states.results[b, :c]))
+
+
+def test_batched_scalar_cap_broadcasts():
+    fam = make_hetero_gaussian(SIGMAS)
+    cfg = VegasConfig(execution=E.ExecutionConfig(batch="vmap"), **BKW)
+    res = E.execute(E.make_plan(fam, cfg), key=BKEY, it_caps=3)
+    np.testing.assert_array_equal(res.n_it_used, [3, 3, 3, 3])
+
+
+def test_caps_compose_with_stop_policy_per_scenario():
+    """Stop masks and budget caps are independent per-lane exits: a lane
+    stops at whichever bites first."""
+    fam = make_hetero_gaussian(SIGMAS)
+    cfg = VegasConfig(execution=E.ExecutionConfig(stop=STOP), **BKW)
+    plan = E.make_plan(fam, cfg)
+    uncapped = E.execute(plan, key=BKEY)
+    caps = np.maximum(np.asarray(uncapped.n_it_used) - 1, 1).astype(np.int32)
+    res = E.execute(plan, key=BKEY, it_caps=caps)
+    np.testing.assert_array_equal(res.n_it_used,
+                                  np.minimum(uncapped.n_it_used, caps))
+
+
+def test_single_run_rejects_vector_cap():
+    ig = igs.make_cosine(dim=2)
+    plan = E.make_plan(ig, VegasConfig(**KW))
+    with pytest.raises(ValueError, match="scalar it_cap"):
+        E.execute(plan, key=KEY, it_caps=np.array([2, 3]))
+
+
+def test_batched_rejects_wrong_cap_shape():
+    fam = make_hetero_gaussian(SIGMAS)
+    cfg = VegasConfig(execution=E.ExecutionConfig(batch="vmap"), **BKW)
+    with pytest.raises(ValueError, match="it_caps shape"):
+        E.execute(E.make_plan(fam, cfg), key=BKEY,
+                  it_caps=np.array([2, 3], np.int32))

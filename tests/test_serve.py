@@ -1,0 +1,256 @@
+"""Sweep-service regressions (ISSUE 7, DESIGN.md §12).
+
+The serving layer must add ZERO numerics of its own: results returned
+through the service are bitwise-equal to a direct `engine.execute` of the
+same coalesced scenarios, admission rejects the full PlanError matrix
+before anything touches a device, time budgets become hard iteration caps
+(calibration batch uncapped, subsequent batches enforced), the
+micro-batcher coalesces by compatibility class up to ``max_batch``, and
+warm starts flow through the shared map pool.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.batch.engine import scenario_keys
+from repro.batch.family import make_gaussian_family
+from repro.core import VegasConfig
+from repro.engine import ExecutionConfig, PlanError, StopPolicy, make_plan
+from repro.engine import execute
+from repro.serve import IntegrationRequest, SweepService
+
+SKW = dict(neval=6_000, max_it=6, skip=2, ninc=32, chunk=2048)
+
+
+def _req(**kw):
+    base = dict(family="gaussian", params=[0.3], **SKW)
+    base.update(kw)
+    return IntegrationRequest(**base)
+
+
+# --- parity: the service adds no numerics ------------------------------------
+
+def test_served_results_bitwise_equal_direct_execute():
+    """Two requests coalesced into one micro-batch return EXACTLY what a
+    direct `execute` of the same scenarios (same per-request streams, same
+    cold-start maps) computes — the service only routes and bills."""
+    svc = SweepService(max_batch=16)
+    t1 = svc.submit(_req(params=[0.3], seed=1, rtol=2e-3))
+    t2 = svc.submit(_req(params=[0.5, 0.7], seed=2, rtol=2e-3))
+    assert svc.drain() == 1  # one coalesced batch
+    r1, r2 = t1.result(0), t2.result(0)
+
+    fam = make_gaussian_family(np.array([0.3, 0.5, 0.7]))
+    cfg = VegasConfig(execution=ExecutionConfig(
+        batch="vmap", stop=StopPolicy(rtol=2e-3)), **SKW)
+    keys = jnp.concatenate([scenario_keys(jax.random.PRNGKey(1), 1),
+                            scenario_keys(jax.random.PRNGKey(2), 2)])
+    direct = execute(make_plan(fam, cfg), keys=keys)
+
+    np.testing.assert_array_equal(np.concatenate([r1.mean, r2.mean]),
+                                  direct.mean)
+    np.testing.assert_array_equal(np.concatenate([r1.sdev, r2.sdev]),
+                                  direct.sdev)
+    np.testing.assert_array_equal(np.concatenate([r1.n_it_used,
+                                                  r2.n_it_used]),
+                                  direct.n_it_used)
+
+
+def test_served_request_bitwise_equal_run_batch():
+    """A request's scenarios through the service ARE a `run_batch` of the
+    same family under the request's key (same `scenario_keys` stream,
+    same cold-start maps)."""
+    from repro.batch import run_batch
+
+    svc = SweepService()
+    t = svc.submit(_req(params=[0.3, 0.5, 0.7], seed=11, rtol=2e-3))
+    svc.drain()
+    r = t.result(0)
+
+    fam = make_gaussian_family(np.array([0.3, 0.5, 0.7]))
+    cfg = VegasConfig(execution=ExecutionConfig(
+        batch="vmap", stop=StopPolicy(rtol=2e-3)), **SKW)
+    direct = run_batch(fam, cfg, key=jax.random.PRNGKey(11))
+    np.testing.assert_array_equal(r.mean, direct.mean)
+    np.testing.assert_array_equal(r.sdev, direct.sdev)
+    np.testing.assert_array_equal(r.n_it_used, direct.n_it_used)
+
+
+def test_results_invariant_to_coalescing():
+    """A request's numbers do not depend on which batch it rode in: the
+    same request served alone agrees with the coalesced serving (its RNG
+    stream is pinned by its own seed, not its lane)."""
+    svc = SweepService(max_batch=16)
+    t1 = svc.submit(_req(params=[0.3], seed=1, rtol=2e-3))
+    svc.submit(_req(params=[0.5, 0.7], seed=2, rtol=2e-3))
+    svc.drain()
+    coalesced = t1.result(0)
+
+    alone = SweepService(max_batch=16)
+    t_alone = alone.submit(_req(params=[0.3], seed=1, rtol=2e-3))
+    alone.drain()
+    solo = t_alone.result(0)
+    np.testing.assert_allclose(coalesced.mean, solo.mean, rtol=1e-6)
+    np.testing.assert_array_equal(coalesced.n_it_used, solo.n_it_used)
+
+
+# --- admission ---------------------------------------------------------------
+
+def test_admission_rejects_the_plan_error_matrix():
+    """Every invalid combination dies at submit() with the engine's
+    PlanError — nothing is enqueued, nothing touches a device."""
+    svc = SweepService()
+    bad = [
+        _req(family="nope"),                          # unknown family
+        _req(params=[]),                              # zero scenarios
+        _req(time_budget_s=0.0),                      # non-positive budget
+        _req(time_budget_s=-1.0),
+        _req(rtol=-1e-3),                             # negative tolerance
+        _req(rtol=1e-3, min_it=SKW["max_it"]),        # unreachable stop
+        _req(backend="pallas-fused", dtype="float64"),  # dtype off-backend
+        _req(backend="ref", tile=8),                  # knob misuse
+        _req(backend="nope"),                         # unknown backend
+        _req(family_kwargs=(("bogus", 3),)),          # builder rejection
+    ]
+    for req in bad:
+        with pytest.raises(PlanError):
+            svc.submit(req)
+    stats = svc.stats()
+    assert stats["requests"]["rejected"] == len(bad)
+    assert stats["requests"]["submitted"] == 0
+    assert svc.drain() == 0
+
+
+# --- time budgets ------------------------------------------------------------
+
+def test_time_budget_calibration_then_enforcement():
+    svc = SweepService(max_batch=8)
+    # Calibration batch: the class has no measured cost yet, so the budget
+    # cannot be converted — the run is uncapped and flagged as such.
+    t0 = svc.submit(_req(seed=0, time_budget_s=1e-9))
+    svc.drain()
+    r0 = t0.result(0)
+    assert not r0.budget_enforced
+    assert (r0.it_cap == SKW["max_it"]).all()
+    assert not r0.capped
+
+    # The class is now calibrated: an impossibly small budget caps at the
+    # floor of 1 iteration, and the cap is a HARD ceiling (wins over the
+    # fixed-length max_it).
+    t1 = svc.submit(_req(seed=3, time_budget_s=1e-9))
+    svc.drain()
+    r1 = t1.result(0)
+    assert r1.budget_enforced
+    assert (r1.it_cap == 1).all()
+    assert (r1.n_it_used == 1).all()
+    assert r1.capped
+    assert r1.billed_iterations == 1
+
+    # A generous budget leaves the run at max_it, uncapped.
+    t2 = svc.submit(_req(seed=4, time_budget_s=3600.0))
+    svc.drain()
+    r2 = t2.result(0)
+    assert r2.budget_enforced
+    assert (r2.it_cap == SKW["max_it"]).all()
+    assert not r2.capped
+
+    assert svc.stats()["iterations"]["capped_scenarios"] == 1
+
+
+def test_no_budget_requests_never_capped():
+    svc = SweepService()
+    t = svc.submit(_req(seed=5))
+    svc.drain()
+    r = t.result(0)
+    assert (r.n_it_used == SKW["max_it"]).all()
+    assert not r.capped and not r.budget_enforced
+
+
+# --- micro-batching ----------------------------------------------------------
+
+def test_coalescing_groups_by_compat_key():
+    svc = SweepService(max_batch=8)
+    gauss = [svc.submit(_req(params=[p], seed=i))
+             for i, p in enumerate([0.2, 0.4, 0.6])]
+    ridge = svc.submit(_req(family="ridge",
+                            params=[[1.0, 0.0, 0.0, 0.0]], seed=9))
+    assert svc.drain() == 2  # one gaussian batch + one ridge batch
+    ids = {t.result(0).batch_id for t in gauss}
+    assert len(ids) == 1  # all three rode the same batch
+    assert ridge.result(0).batch_id not in ids
+    stats = svc.stats()
+    assert stats["batches"]["count"] == 2
+    assert stats["batches"]["max_occupancy"] == 3
+    assert stats["requests"]["completed"] == 4
+    assert stats["requests"]["scenarios_completed"] == 4
+
+
+def test_max_batch_splits_without_splitting_requests():
+    svc = SweepService(max_batch=4)
+    tickets = [svc.submit(_req(params=[0.2 + 0.1 * i, 0.25 + 0.1 * i],
+                               seed=i)) for i in range(3)]
+    assert svc.drain() == 2  # 2+2 scenarios, then the remaining 2
+    sizes = sorted(t.result(0).batch_size for t in tickets)
+    assert sizes == [2, 4, 4]
+
+
+def test_oversized_request_forms_its_own_batch():
+    svc = SweepService(max_batch=2)
+    t = svc.submit(_req(params=[0.2, 0.4, 0.6], seed=1))
+    assert svc.drain() == 1
+    assert t.result(0).batch_size == 3  # never split, even past max_batch
+
+
+# --- warm starts -------------------------------------------------------------
+
+def test_second_burst_warm_starts_from_the_pool(tmp_path):
+    path = str(tmp_path / "serve_maps.npz")
+    svc = SweepService(cache=path)
+    t1 = svc.submit(_req(seed=1))
+    svc.drain()
+    assert not t1.result(0).warm_started
+    t2 = svc.submit(_req(params=[0.3, 0.5], seed=2))  # different occupancy
+    svc.drain()
+    assert t2.result(0).warm_started  # pool maps broadcast to any B
+    stats = svc.stats()
+    assert stats["cache"] == {"hits": 1, "misses": 1, "hit_rate": 0.5}
+
+    # The pool is shared state: a NEW service on the same path warm-starts
+    # its very first batch.
+    svc2 = SweepService(cache=path)
+    t3 = svc2.submit(_req(seed=7))
+    svc2.drain()
+    assert t3.result(0).warm_started
+
+
+# --- the long-lived worker ---------------------------------------------------
+
+def test_background_worker_serves_submissions():
+    with SweepService(max_wait_s=0.01) as svc:
+        t1 = svc.submit(_req(seed=1, rtol=5e-3))
+        t2 = svc.submit(_req(params=[0.6], seed=2, rtol=5e-3))
+        r1 = t1.result(timeout=120.0)
+        r2 = t2.result(timeout=120.0)
+    assert r1.n_scenarios == 1 and r2.n_scenarios == 1
+    stats = svc.stats()
+    assert stats["requests"]["completed"] == 2
+    assert stats["requests"]["in_flight"] == 0
+    assert stats["throughput"]["requests_per_s"] > 0
+
+
+def test_stats_reports_billing_and_cost_model():
+    svc = SweepService()
+    t = svc.submit(_req(seed=1, rtol=0.5))  # loose target: stops early
+    svc.drain()
+    r = t.result(0)
+    stats = svc.stats()
+    assert stats["iterations"]["billed"] == r.billed_iterations
+    assert (stats["iterations"]["billed"]
+            + stats["iterations"]["saved_vs_max_it"]
+            == SKW["max_it"] * r.n_scenarios)
+    assert stats["cost_model"]["classes_calibrated"] == 1
+    assert stats["programs_cached"] == 1
+    assert r.met_precision is not None and r.met_precision.all()
+    assert r.billed_evals == r.billed_iterations * SKW["neval"]
