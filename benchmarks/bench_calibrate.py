@@ -1,0 +1,65 @@
+"""Cost-model calibration harness (ISSUE 8, DESIGN.md §13).
+
+  PYTHONPATH=src python -m benchmarks.bench_calibrate --out COST_TABLE.json
+
+Runs `repro.engine.autotune.calibrate` — steady-state fill/adapt timings
+over the (backend, dim, neval, chunk, tile) calibration grid — fits the
+per-class cost coefficients, and writes the device-keyed table that
+``make_plan(autotune=True)`` / ``--autotune`` consume (via
+``$REPRO_COST_TABLE`` or ``./COST_TABLE.json``).  Each measured grid point
+is also emitted as a ``calibrate/*`` CSV/JSON row, so the calibration run
+itself lands in the --json artifact next to BENCH_*.json.
+
+Inside the suite harness (``benchmarks.run --only calibrate``) the table is
+written to COST_TABLE.json in the working directory.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .common import emit
+
+
+def _emit_sample(name: str, sample: dict) -> None:
+    emit(name, sample["seconds"],
+         f"n_cap={sample['n_cap']} n_chunks={sample['n_chunks']}",
+         backend=sample["class"].split("|")[0], chunk=sample["chunk"],
+         tile=sample["tile"], n_eval=sample["neval"], dim=sample["d"])
+
+
+def run(fast=True, out: str = "COST_TABLE.json", backends=None):
+    from repro.engine import autotune
+
+    table = autotune.calibrate(fast=fast, backends=backends,
+                               emit=_emit_sample)
+    table.save(out)
+    for key, c in sorted(table.classes.items()):
+        print(f"# {key}: c_fixed={c.c_fixed:.3g}s "
+              f"c_eval_dim={c.c_eval_dim:.3g} c_chunk={c.c_chunk:.3g} "
+              f"c_tile_step={c.c_tile_step:.3g} "
+              f"iter_overhead={c.iter_overhead_s:.3g}s "
+              f"({c.n_samples} samples)", file=sys.stderr)
+    print(f"# wrote {out} ({table.device_kind}/{table.jax_backend}, "
+          f"calibrated in {table.calibration_wall_s:.1f}s)", file=sys.stderr)
+    return table
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="COST_TABLE.json",
+                    help="where to write the fitted cost table")
+    ap.add_argument("--full", action="store_true",
+                    help="the full calibration grid (default: the fast grid "
+                         "— ~a minute on one CPU core)")
+    ap.add_argument("--backends", default=None,
+                    help="comma-separated registry backends (default: all)")
+    args = ap.parse_args(argv)
+    backends = (tuple(filter(None, args.backends.split(",")))
+                if args.backends else None)
+    return run(fast=not args.full, out=args.out, backends=backends)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,8 +29,20 @@ from repro.batch.family import make_gaussian_family
 from repro.core import VegasConfig
 from repro.core import run as core_run
 from repro.core.integrands import make_cosine, make_roos_arnold
-from repro.engine import ExecutionConfig, StopPolicy
+from repro.engine import ExecutionConfig, StopPolicy, make_plan
 from .common import emit, timeit
+
+
+def _knobs(plan) -> dict:
+    """The execution-knob fields every run/* row carries (BENCH_run.json
+    rows must name the chunk/tile/mode they timed — the autotuner's paired
+    rows are meaningless without them)."""
+    interpret = plan.execution.interpret
+    if "pallas" in plan.backend.name:
+        from repro.kernels import resolve_interpret
+        interpret = resolve_interpret(interpret)
+    return dict(backend=plan.backend.name, chunk=int(plan.cfg.chunk),
+                tile=plan.execution.tile, interpret=interpret)
 
 
 def run(fast=True):
@@ -49,7 +61,7 @@ def run(fast=True):
                        warmup=1)
             emit(f"run/{name}/{backend}", t,
                  f"evals_per_s={neval * max_it / t:,.0f}",
-                 n_eval=neval, backend=backend, max_it=max_it)
+                 n_eval=neval, max_it=max_it, **_knobs(make_plan(ig, cfg)))
 
     # Adaptive early stopping: the same program under a loose rtol target.
     # The row records the iterations the while_loop did not run — the GPU
@@ -63,9 +75,10 @@ def run(fast=True):
     emit("run/cosine_d6/ref/rtol=5e-4", t,
          f"n_it_used={res.n_it_used}/{max_it} "
          f"it_saved={max_it - res.n_it_used}",
-         n_eval=neval, backend="ref", max_it=max_it,
+         n_eval=neval, max_it=max_it,
          n_it_used=int(res.n_it_used),
-         it_saved=int(max_it - res.n_it_used))
+         it_saved=int(max_it - res.n_it_used),
+         **_knobs(make_plan(ig, cfg_stop)))
 
     # The batched whole-run program (B scenarios, one jitted fori_loop).
     b = 4
@@ -74,7 +87,7 @@ def run(fast=True):
     t = timeit(lambda: run_batch(fam, cfg, key=key), repeats=3, warmup=1)
     emit(f"run/gaussian_family/B={b}/ref", t,
          f"evals_per_s={b * neval * max_it / t:,.0f}",
-         n_eval=neval, backend="ref", max_it=max_it, batch=b)
+         n_eval=neval, max_it=max_it, batch=b, **_knobs(make_plan(fam, cfg)))
 
     # ... and with per-scenario stop masks: scenario-iterations saved.
     cfg_bstop = VegasConfig(
@@ -86,8 +99,79 @@ def run(fast=True):
     saved = b * max_it - int(bres.n_it_used.sum())
     emit(f"run/gaussian_family/B={b}/ref/rtol=5e-4", t,
          f"n_it_used={bres.n_it_used.tolist()} it_saved={saved}",
-         n_eval=neval, backend="ref", max_it=max_it, batch=b,
-         it_saved=saved)
+         n_eval=neval, max_it=max_it, batch=b, it_saved=saved,
+         **_knobs(make_plan(fam, cfg_bstop)))
+
+    autotune_pairs(fast=fast)
+
+
+def _steady_single(plan, key, repeats=2):
+    """Steady-state wall clock of a single-scenario plan: one prebuilt
+    non-donating program, compile excluded (the regime where knob choices
+    are measurable at all — a fresh jit per call re-pays trace+compile,
+    which drowns the chunk/tile effects the autotuner optimizes)."""
+    from repro.core import integrator as core_mod
+    from repro.engine.executor import make_single_program
+    prog = make_single_program(plan)
+    state = core_mod.init_state(plan.workload, plan.cfg, key)
+    return timeit(lambda: prog(state), repeats=repeats, warmup=1)
+
+
+def _steady_family(plan, key, repeats=2):
+    """Steady-state wall clock of a batched family plan (same contract)."""
+    from repro.batch.engine import scenario_keys
+    from repro.engine.executor import (make_family_program,
+                                       uniform_family_edges)
+    prog = make_family_program(plan)
+    fam = plan.workload
+    args = (fam.params, scenario_keys(key, plan.batch_size),
+            uniform_family_edges(fam, plan.cfg, plan.batch_size))
+    return timeit(lambda: prog(*args), repeats=repeats, warmup=1)
+
+
+def autotune_pairs(fast=True):
+    """The autotuner's paired rows (ISSUE 8 acceptance): on each benchmark
+    shape, the same workload with default knobs vs `autotune=True` knobs,
+    timed steady-state.  ``benchmarks.run --gate-run`` pairs the
+    ``.../default`` and ``.../autotuned`` rows and fails when autotuning
+    made a shape slower.  Both shapes are high-dim/low-n_cubes, where the
+    default chunk's n_cap padding (cfg.resolve rounds n_cap UP to a chunk
+    multiple) is the dominant recoverable cost on CPU."""
+    key = jax.random.PRNGKey(0)
+    neval = 100_000 if fast else 500_000
+    max_it = 6
+    shapes = [
+        ("roos_arnold_d10", make_roos_arnold(),
+         dict(neval=neval, max_it=max_it, skip=2, ninc=256, chunk=1 << 14)),
+        ("gaussian_family_d10/B=4",
+         make_gaussian_family(np.linspace(0.2, 0.8, 4), dim=10),
+         dict(neval=neval // 2, max_it=max_it, skip=2, ninc=128,
+              chunk=1 << 14)),
+    ]
+    for name, workload, kw in shapes:
+        is_family = hasattr(workload, "params")
+        b = workload.batch_size if is_family else 1
+        steady = _steady_family if is_family else _steady_single
+        default_plan = make_plan(workload, VegasConfig(**kw))
+        tuned_plan = make_plan(workload, VegasConfig(
+            execution=ExecutionConfig(autotune=True), **kw))
+        rep = tuned_plan.tuned
+        t_def = steady(default_plan, key)
+        t_tun = steady(tuned_plan, key)
+        evals = b * kw["neval"] * max_it
+        emit(f"run/autotune/{name}/default", t_def,
+             f"evals_per_s={evals / t_def:,.0f}",
+             n_eval=kw["neval"], max_it=max_it, batch=b,
+             predicted_s=(None if rep is None
+                          else round(rep.predicted_default_s, 6)),
+             **_knobs(default_plan))
+        emit(f"run/autotune/{name}/autotuned", t_tun,
+             f"evals_per_s={evals / t_tun:,.0f} "
+             f"speedup={t_def / t_tun:.2f}x",
+             n_eval=kw["neval"], max_it=max_it, batch=b,
+             predicted_s=(None if rep is None
+                          else round(rep.predicted_s, 6)),
+             **_knobs(tuned_plan))
 
 
 #: The gaussian-peak pull-distribution setup, shared VERBATIM with

@@ -86,18 +86,19 @@ def _bench_burst(n: int):
     wall_c, res_c, stats_c = _serve_burst(n, max_batch=n)
     wall_s, res_s, stats_s = _serve_burst(n, max_batch=1)
     speedup = wall_s / wall_c
+    knobs = dict(backend="ref", chunk=KW["chunk"], tile=None, interpret=None)
     emit(f"serve/burst={n}/coalesced", wall_c,
          f"speedup={speedup:.2f}x req_per_s={n / wall_c:.1f}",
-         n_requests=n, max_batch=n, backend="ref", rtol=RTOL,
+         n_requests=n, max_batch=n, rtol=RTOL,
          requests_per_s=round(n / wall_c, 2),
          mean_occupancy=stats_c["batches"]["mean_occupancy"],
-         met_sla=sum(_met(r) for r in res_c))
+         met_sla=sum(_met(r) for r in res_c), **knobs)
     emit(f"serve/burst={n}/serial", wall_s,
          f"req_per_s={n / wall_s:.1f}",
-         n_requests=n, max_batch=1, backend="ref", rtol=RTOL,
+         n_requests=n, max_batch=1, rtol=RTOL,
          requests_per_s=round(n / wall_s, 2),
          mean_occupancy=stats_s["batches"]["mean_occupancy"],
-         met_sla=sum(_met(r) for r in res_s))
+         met_sla=sum(_met(r) for r in res_s), **knobs)
     return speedup, wall_c, wall_s, res_c + res_s
 
 

@@ -39,12 +39,23 @@ def timeit(fn, *args, repeats=3, warmup=1):
     return ts[len(ts) // 2]
 
 
+def device_kind() -> str:
+    """The device kind every row is stamped with (the cost-table key too:
+    engine.autotune keys calibrations the same way)."""
+    try:
+        return jax.devices()[0].device_kind
+    except Exception:
+        return "unknown"
+
+
 def emit(name: str, seconds: float, derived: str = "", **fields):
     """One CSV row ``name,us_per_call,derived`` + a structured record.
 
     Extra keyword fields (``n_eval=...``, ``backend=...``) go into the JSON
-    record only — the CSV format is unchanged.
+    record only — the CSV format is unchanged.  Every record is stamped with
+    ``device_kind`` so BENCH_*.json artifacts from different machines are
+    distinguishable (and comparable against the matching COST_TABLE.json).
     """
     print(f"{name},{seconds * 1e6:.1f},{derived}")
     ROWS.append({"name": name, "us_per_call": round(seconds * 1e6, 1),
-                 "derived": derived, **fields})
+                 "derived": derived, "device_kind": device_kind(), **fields})

@@ -20,6 +20,12 @@ benchmarks/bench_serve.py).
 ``--gate-fill`` turns the P-V2 vs P-V3 comparison into a regression gate:
 exit nonzero if any ``fill_fused`` row is slower than its ``fill_pallas``
 twin (CI's bench-smoke job runs ``--only table1,batch --json --gate-fill``).
+``--gate-run`` does the same for the autotuner (ISSUE 8): the
+``run/autotune/*`` rows pair each shape's default-knob timing with its
+``autotune=True`` twin, and the gate fails if autotuning made any shape
+slower — or never made one faster.  The ``calibrate`` suite (not in the
+default set's hot path, but first when selected) measures the cost-model
+grid and writes ``COST_TABLE.json`` for those autotuned rows to consume.
 """
 
 from __future__ import annotations
@@ -44,6 +50,46 @@ def run_rows(rows: list[dict]) -> list[dict]:
 def serve_rows(rows: list[dict]) -> list[dict]:
     """The serving-throughput subset: requests/sec rows (bench_serve.py)."""
     return [r for r in rows if r["name"].startswith("serve/")]
+
+
+def gate_run(rows: list[dict]) -> list[str]:
+    """The autotuner's regression gate (ISSUE 8): pair each
+    ``run/autotune/<shape>/autotuned`` row with its ``/default`` twin and
+    return a failure message per pair where autotuning made the shape
+    slower than the default knobs (beyond a 5% timing-noise allowance) —
+    plus one failure if NO measured pair came out strictly faster (an
+    autotuner that never wins is not earning its keep)."""
+    base = {r["name"].replace("/default", ""): r for r in rows
+            if r["name"].startswith("run/autotune/")
+            and r["name"].endswith("/default")}
+    failures, pairs, wins = [], 0, 0
+    for r in rows:
+        if not (r["name"].startswith("run/autotune/")
+                and r["name"].endswith("/autotuned")):
+            continue
+        twin = base.get(r["name"].replace("/autotuned", ""))
+        if twin is None:
+            continue
+        if r.get("interpret") != twin.get("interpret"):
+            # Same universe rule as gate_fill: interpreter vs compiled
+            # timings are incomparable.
+            continue
+        pairs += 1
+        if r["us_per_call"] > twin["us_per_call"] * 1.05:
+            failures.append(
+                f"GATE: {r['name']} ({r['us_per_call']:.0f}us, "
+                f"chunk={r.get('chunk')} tile={r.get('tile')}) slower than "
+                f"{twin['name']} ({twin['us_per_call']:.0f}us, "
+                f"chunk={twin.get('chunk')} tile={twin.get('tile')})")
+        if r["us_per_call"] < twin["us_per_call"]:
+            wins += 1
+    if pairs == 0:
+        failures.append("GATE: no autotuned/default pair was measured — "
+                        "--gate-run has nothing to check")
+    elif wins == 0:
+        failures.append(f"GATE: autotuning won on none of the {pairs} "
+                        f"measured shapes")
+    return failures
 
 
 def gate_fill(rows: list[dict]) -> list[str]:
@@ -78,17 +124,22 @@ def main() -> None:
     ap.add_argument("--gate-fill", action="store_true",
                     help="exit nonzero if the fused fill is slower than the "
                          "baseline pallas fill on any measured shape")
+    ap.add_argument("--gate-run", action="store_true",
+                    help="exit nonzero if an autotuned run is slower than "
+                         "its default-knob twin on any measured shape, or "
+                         "if autotuning never won")
     args = ap.parse_args()
     fast = not args.full
     only = set(filter(None, args.only.split(",")))
 
     from . import (bench_applications, bench_batch, bench_breakdown,
-                   bench_grad, bench_integrands, bench_multidevice,
-                   bench_runs, bench_scaling, bench_serve,
+                   bench_calibrate, bench_grad, bench_integrands,
+                   bench_multidevice, bench_runs, bench_scaling, bench_serve,
                    bench_stratification)
     from . import common
 
     suites = {
+        "calibrate": bench_calibrate,
         "table1": bench_breakdown,
         "table7": bench_integrands,
         "fig3": bench_scaling,
@@ -155,6 +206,18 @@ def main() -> None:
                   "--gate-fill has nothing to check", file=sys.stderr)
             sys.exit(2)
         print(f"# fill gate OK ({n} fused shapes measured)", file=sys.stderr)
+
+    if args.gate_run:
+        failures = gate_run(common.ROWS)
+        for msg in failures:
+            print(msg, file=sys.stderr)
+        if failures:
+            sys.exit(2)
+        n = sum(1 for r in common.ROWS
+                if r["name"].startswith("run/autotune/")
+                and r["name"].endswith("/autotuned"))
+        print(f"# run gate OK ({n} autotuned shapes measured)",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -46,15 +46,18 @@ _LAZY = {
     "make_sharded_fill": "sharding", "make_local_fill": "sharding",
     "shard_chunk_range": "sharding", "mesh_shard_count": "sharding",
     "replicated_shard_map": "sharding", "make_stop_sync": "sharding",
+    "CostTable": "autotune", "TuneReport": "autotune",
+    "calibrate": "autotune", "resolve_table": "autotune",
     "plan": "plan", "executor": "executor", "sharding": "sharding",
+    "autotune": "autotune",
 }
 
 __all__ = [
     "BATCH_MODES", "BackendSpec", "CAPABILITIES", "CheckpointPolicy",
-    "ExecutionConfig", "GRAD_MODES", "GradPolicy", "Plan", "PlanError",
-    "StopPolicy", "available", "bind_fill", "capability_matrix", "execute",
-    "get_backend", "make_plan", "make_sharded_fill", "make_stop_sync",
-    "register",
+    "CostTable", "ExecutionConfig", "GRAD_MODES", "GradPolicy", "Plan",
+    "PlanError", "StopPolicy", "TuneReport", "available", "bind_fill",
+    "calibrate", "capability_matrix", "execute", "get_backend", "make_plan",
+    "make_sharded_fill", "make_stop_sync", "register", "resolve_table",
 ]
 
 

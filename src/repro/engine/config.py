@@ -19,6 +19,10 @@ carries the orthogonal execution axes the engine composes
   * **stopping**  — a :class:`StopPolicy` convergence target (rtol/atol/
                    min_it) that turns the fixed ``fori_loop`` into an
                    adaptive fixed-shape ``lax.while_loop`` (DESIGN.md §10);
+  * **autotuning** — ``autotune=True`` asks ``make_plan`` to pick the
+                   chunk/tile/batch-split/shard knobs from the measured
+                   per-device cost model (`engine.autotune`, DESIGN.md §13;
+                   ``cost_table`` overrides the table lookup);
   * **gradients** — a :class:`GradPolicy` that makes the run differentiable
                    (`repro.grad`, DESIGN.md §11): adapt with gradients
                    stopped, then a frozen-map evaluation pass whose pathwise
@@ -179,6 +183,11 @@ class ExecutionConfig:
     checkpoint: CheckpointPolicy | None = None
     stop: StopPolicy | None = None  # convergence target -> while_loop (§10)
     grad: GradPolicy | None = None  # differentiable two-phase run (§11)
+    autotune: bool = False          # measured-cost-model knob choice (§13):
+                                    # make_plan picks chunk/tile/batch/shard
+                                    # via engine.autotune.tune
+    cost_table: Any = None          # autotune table override: a CostTable or
+                                    # a path; None = resolve_table order
 
     def with_legacy(self, **flat) -> "ExecutionConfig":
         """Fold the pre-engine flat `VegasConfig` fields (``backend``,
@@ -224,4 +233,6 @@ class ExecutionConfig:
             bits.append(f"stop[{self.stop.describe()}]")
         if self.grad is not None and self.grad.active:
             bits.append(f"grad[{self.grad.describe()}]")
+        if self.autotune:
+            bits.append("autotune")
         return " ".join(bits)

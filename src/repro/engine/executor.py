@@ -203,6 +203,25 @@ def uniform_family_edges(family, cfg, b: int):
     return jnp.broadcast_to(uni, (b,) + uni.shape)
 
 
+def make_single_program(plan: Plan):
+    """Build the jitted whole-run program of a single-scenario plan ONCE,
+    for callers that run the same plan repeatedly — ``prog(state) ->
+    state``.  Unlike the per-call program inside :func:`execute` it does not
+    donate its input, so one initial state can be replayed; steady-state
+    timing (``benchmarks/bench_runs.py``, `engine.autotune.calibrate`)
+    needs exactly this — the knob effects the cost model fits are several
+    times smaller than trace+compile, which a fresh-jit-per-call timing
+    would re-pay and drown in."""
+    if plan.is_family or plan.checkpoint is not None:
+        raise ValueError("make_single_program builds the single-scenario "
+                         "on-device loop; use make_family_program for "
+                         "batched plans")
+    fill_fn = _plan_fill_fn(plan)
+    return jax.jit(functools.partial(
+        core.run_loop, integrand=plan.workload, cfg=plan.cfg, start=0,
+        fill_fn=fill_fn, stop=plan.stop))
+
+
 def make_family_program(plan: Plan, *, with_caps: bool = False):
     """Build the jitted vmapped whole-run program of a batched family plan.
 

@@ -45,6 +45,8 @@ class Plan:
     checkpoint: CheckpointPolicy | None
     stop: StopPolicy | None             # None, or an ACTIVE policy (§10)
     grad: GradPolicy | None = None      # None, or an ACTIVE policy (§11)
+    tuned: Any = None                   # TuneReport when the knobs came from
+                                        # the measured cost model (§13)
 
     def describe(self) -> str:
         w = self.workload
@@ -59,6 +61,8 @@ class Plan:
             f"  loop       {'host (checkpointing)' if self.checkpoint else ('on-device while_loop [stop: ' + self.stop.describe() + ']' if self.stop else 'on-device fori_loop')}",
             f"  grad       {self.grad.describe() + ' (two-phase: stop_gradient adapt -> frozen-map eval, §11)' if self.grad else 'off'}",
         ]
+        if self.tuned is not None:
+            lines.append(f"  knobs      {self.tuned.describe()}")
         return "\n".join(lines)
 
 
@@ -72,6 +76,17 @@ def make_plan(workload, cfg: core.VegasConfig | None = None,
         execution = cfg.execution
     elif execution is not cfg.execution:
         cfg = cfg.with_execution(execution)
+    tuned = None
+    if execution.autotune:
+        # §13: the cost-model chooser replaces cfg's chunk/tile/batch/shard
+        # knobs with the predicted-fastest VALID combination (candidates are
+        # probed through make_plan itself with autotune=False, so the tuner
+        # cannot emit a plan this function would reject — and its fallback
+        # is the caller's own knobs, so autotuning never loses a plan that
+        # explicit knobs would have admitted).
+        from . import autotune as autotune_mod
+        cfg, tuned = autotune_mod.tune(workload, cfg)
+        execution = cfg.execution
     rcfg = cfg.resolve(workload.dim)
 
     # --- backend axis -------------------------------------------------------
@@ -229,7 +244,8 @@ def make_plan(workload, cfg: core.VegasConfig | None = None,
     return Plan(workload=workload, cfg=rcfg, execution=execution,
                 backend=spec, is_family=is_family, batched=batched,
                 batch_size=batch_size, mesh=mesh, shard_axes=shard_axes,
-                n_shards=n_shards, checkpoint=ckpt, stop=stop, grad=grad)
+                n_shards=n_shards, checkpoint=ckpt, stop=stop, grad=grad,
+                tuned=tuned)
 
 
 def _caps(capability: str) -> list[str]:

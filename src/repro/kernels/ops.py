@@ -55,28 +55,43 @@ def key_bits(key) -> jax.Array:
     return key
 
 
+def tile_footprint_bytes(tile: int, d: int, ninc: int, n_cubes: int) -> int:
+    """VMEM footprint of one kernel tile under the DESIGN.md §7 budget math
+    (f32): the d pass-1 one-hots stay live for pass-2 reuse (d * tile *
+    ninc), the cube-window one-hot adds tile * span, the transform scratch
+    ~8 copies of (tile, d), plus the grid-resident state — map
+    tables/accumulators (3 * d * ninc) and the two (rows, LANE) cube-moment
+    accumulators (~2.1 MB at the max_cubes = 2^18 cap), which shrink the
+    budget available to per-tile scratch."""
+    span = vk.span_for_tile(tile)
+    resident = 4 * (3 * d * ninc + 2 * vk.padded_cube_rows(n_cubes, tile)
+                    * vk.LANE)
+    return 4 * (d * tile * ninc + tile * span + 8 * tile * d) + resident
+
+
+def valid_tiles(chunk: int, d: int, ninc: int, n_cubes: int, *,
+                vmem_budget: int = 8 << 20,
+                max_tile: int = 1024) -> list[int]:
+    """Every tile the kernel accepts for this shape, ascending: divisors of
+    ``chunk`` whose :func:`tile_footprint_bytes` fits the VMEM budget.
+
+    This is the single validity oracle shared by :func:`autotune_tile` (which
+    takes the largest entry) and the plan autotuner (`engine.autotune`, which
+    scores entries with the measured cost model) — so the autotuner can never
+    choose a tile the kernel would reject.
+    """
+    return [t for t in range(1, min(chunk, max_tile) + 1)
+            if chunk % t == 0
+            and tile_footprint_bytes(t, d, ninc, n_cubes) <= vmem_budget]
+
+
 def autotune_tile(chunk: int, d: int, ninc: int, n_cubes: int, *,
                   vmem_budget: int = 8 << 20, max_tile: int = 1024) -> int:
-    """Largest tile that divides ``chunk`` and fits the VMEM budget.
-
-    Footprint model (f32, see DESIGN.md §7 budget math): the d pass-1 one-hots
-    stay live for pass-2 reuse (d * tile * ninc), the cube-window one-hot adds
-    tile * span, the transform scratch ~8 copies of (tile, d), plus the
-    grid-resident state — map tables/accumulators (3 * d * ninc) and the two
-    (rows, LANE) cube-moment accumulators (~2.1 MB at the max_cubes = 2^18
-    cap), which shrink the budget available to per-tile scratch.
-    """
-    best = 1
-    for t in range(1, min(chunk, max_tile) + 1):
-        if chunk % t:
-            continue
-        span = vk.span_for_tile(t)
-        resident = 4 * (3 * d * ninc + 2 * vk.padded_cube_rows(n_cubes, t)
-                        * vk.LANE)
-        fp = 4 * (d * t * ninc + t * span + 8 * t * d) + resident
-        if fp <= vmem_budget:
-            best = t
-    return best
+    """Largest tile that divides ``chunk`` and fits the VMEM budget (the
+    static default when no measured cost table picks one)."""
+    tiles = valid_tiles(chunk, d, ninc, n_cubes, vmem_budget=vmem_budget,
+                        max_tile=max_tile)
+    return tiles[-1] if tiles else 1
 
 
 def _pick_tile(tile: int | None, chunk: int, d: int, ninc: int,

@@ -22,6 +22,7 @@ from repro.core import VegasConfig
 from repro.core import integrands as igs
 from repro.engine import (CheckpointPolicy, ExecutionConfig, GradPolicy,
                           StopPolicy, available, execute, make_plan)
+from repro.launch import env
 
 INTEGRANDS = {
     "sine_exp": igs.make_sine_exp,
@@ -49,6 +50,15 @@ def add_execution_args(ap: argparse.ArgumentParser) -> None:
                          "interpreter elsewhere (kernels.backend_default)")
     ap.add_argument("--tile", type=int, default=None,
                     help="pallas tile override (default: VMEM autotune)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="pick chunk/tile/batch/shard knobs from the "
+                         "measured cost model (engine.autotune, §13); "
+                         "combine with --plan to see the chosen knobs and "
+                         "predicted vs default cost without running")
+    ap.add_argument("--cost-table", default=None, metavar="PATH",
+                    help="calibrated cost table for --autotune (default: "
+                         "$REPRO_COST_TABLE, then ./COST_TABLE.json, then "
+                         "the builtin order-of-magnitude table)")
     ap.add_argument("--shard", action="store_true",
                     help="shard the fill over all local devices "
                          "(launch.mesh.make_local_mesh)")
@@ -70,6 +80,7 @@ def add_execution_args(ap: argparse.ArgumentParser) -> None:
                          "(the derivative-integrand passes)")
     ap.add_argument("--plan", action="store_true",
                     help="print the validated execution plan and exit")
+    env.add_env_args(ap)
 
 
 def build_execution(args, **extra) -> ExecutionConfig:
@@ -89,6 +100,7 @@ def build_execution(args, **extra) -> ExecutionConfig:
             if args.grad != "off" else None)
     return ExecutionConfig(backend=args.backend, interpret=interpret,
                            tile=args.tile, mesh=mesh, stop=stop, grad=grad,
+                           autotune=args.autotune, cost_table=args.cost_table,
                            **extra)
 
 
@@ -105,6 +117,7 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     add_execution_args(ap)
     args = ap.parse_args(argv)
+    env.apply_env_args(args)
 
     ig = INTEGRANDS[args.integrand]()
     base = PAPER_CONFIGS[args.config]

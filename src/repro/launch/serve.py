@@ -23,6 +23,7 @@ import sys
 import numpy as np
 
 from repro.engine import PlanError
+from repro.launch import env
 from repro.serve import IntegrationRequest, SweepService
 
 
@@ -78,7 +79,13 @@ def main(argv=None):
                     help="per-request result timeout (seconds)")
     ap.add_argument("--stats-json", default=None, metavar="OUT.json",
                     help="write the final stats() snapshot")
+    ap.add_argument("--cost-table", default=None, metavar="PATH",
+                    help="calibrated cost table (engine.autotune) used as "
+                         "the budget-calibration prior for classes the "
+                         "service has not yet observed")
+    env.add_env_args(ap)
     args = ap.parse_args(argv)
+    env.apply_env_args(args)
 
     if args.requests:
         requests = _load_requests(args.requests)
@@ -88,7 +95,7 @@ def main(argv=None):
         requests = _demo_burst(args)
 
     with SweepService(max_batch=args.max_batch, max_wait_s=args.max_wait,
-                      cache=args.cache) as svc:
+                      cache=args.cache, cost_table=args.cost_table) as svc:
         tickets = []
         for req in requests:
             try:

@@ -27,6 +27,7 @@ from repro.batch import MapCache, run_batch, run_serial
 from repro.batch.family import FAMILIES
 from repro.core import VegasConfig
 from repro.engine import make_plan
+from repro.launch import env
 from repro.launch.integrate import add_execution_args, build_execution
 
 
@@ -46,6 +47,7 @@ def main(argv=None):
                     help="also run the B-serial-calls baseline and compare")
     add_execution_args(ap)
     args = ap.parse_args(argv)
+    env.apply_env_args(args)
 
     family = FAMILIES[args.family](args.batch)
     execution = build_execution(args)

@@ -20,8 +20,10 @@ composed entirely from engine pieces PRs 1–6 built:
   * **time budgets** — a request's wall-clock budget becomes an
     iteration-count cap (``floor(budget / measured per-iteration cost)``)
     threaded through the adaptive loop's carry (`core.run_loop`); the cost
-    model is measured per compatibility class from executed batches (the
-    first batch of a class calibrates, subsequent ones enforce);
+    model is the engine's shared `engine.autotune.OnlineCost`: min-observed
+    per compatibility class from executed batches (the first batch of a
+    class calibrates, subsequent ones enforce), optionally seeded with a
+    calibrated `CostTable` prior so even a class's first batch is enforced;
   * **billing** — every request pays for its own scenarios' ``n_it_used``,
     not for the batch it rode in;
   * **metrics** — queue/run latency, batch occupancy, cache hit rate, and
@@ -51,6 +53,7 @@ from repro.batch.family import (IntegrandFamily, make_asian_family,
                                 make_gaussian_family, make_ridge_family)
 from repro.core import integrator as core
 from repro.engine import ExecutionConfig, PlanError, StopPolicy, make_plan
+from repro.engine import autotune as autotune_mod
 from repro.engine import executor as executor_mod
 
 from .metrics import ServeMetrics
@@ -103,12 +106,21 @@ class SweepService:
     request of a burst waits for companions); ``cache`` shares warm maps —
     a `MapCache`, a path (persistent, shareable with CLI sweeps), or None
     for a private in-memory pool.
+
+    ``cost_table`` seeds the budget cost model with the engine's shared
+    calibrated table (`engine.autotune.CostTable` or a path): classes with
+    no executed batch yet fall back to the table's predicted
+    per-scenario-iteration cost, so a request's FIRST batch can already be
+    budget-enforced.  ``None`` (the default) keeps the legacy behavior —
+    the first batch of each class calibrates, measured minima enforce from
+    the second on — bit-identical results either way (`OnlineCost`).
     """
 
     def __init__(self, *, max_batch: int = 16, max_wait_s: float = 0.02,
                  cache: MapCache | str | None = None,
                  families: dict[str, ServedFamily] | None = None,
-                 max_programs: int = 32):
+                 max_programs: int = 32,
+                 cost_table: "autotune_mod.CostTable | str | None" = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.max_batch = max_batch
@@ -125,7 +137,11 @@ class SweepService:
         self._lock = threading.Lock()        # programs + cost model
         self._programs: OrderedDict[tuple, Any] = OrderedDict()
         self._max_programs = max_programs
-        self._cost: dict[tuple, float] = {}  # per-scenario-iteration seconds
+        if isinstance(cost_table, str):
+            cost_table = autotune_mod.CostTable.load(cost_table)
+        # The engine's shared cost model (§13): min-observed per-class
+        # per-scenario-iteration seconds, with the table as prior.
+        self._cost = autotune_mod.OnlineCost(table=cost_table)
         self._ids = iter(range(1 << 62))
         self._batch_ids = iter(range(1 << 62))
 
@@ -249,14 +265,20 @@ class SweepService:
                 self._programs.popitem(last=False)
         return prog
 
-    def _caps_for(self, tickets: list[Ticket], max_it: int,
+    def _caps_for(self, tickets: list[Ticket], rcfg,
                   batch_scenarios: int) -> tuple[np.ndarray, bool]:
         """Per-scenario iteration caps from each request's time budget and
-        the class's measured per-iteration cost.  Returns ``(caps (B,),
-        enforced)`` — ``enforced`` False while the class is uncalibrated
-        (first batch), in which case every cap is ``max_it``."""
+        the class's per-iteration cost — the min-observed measurement, or
+        the shared `CostTable` prediction for a class with no executed
+        batch yet (`OnlineCost.unit`).  Returns ``(caps (B,), enforced)`` —
+        ``enforced`` False while the class is uncalibrated AND no table
+        prior exists (first batch), in which case every cap is ``max_it``."""
+        req0 = tickets[0].request
+        max_it = rcfg.max_it
         with self._lock:
-            unit = self._cost.get(tickets[0].compat_key)
+            unit = self._cost.unit(tickets[0].compat_key, rcfg=rcfg,
+                                   backend=req0.backend,
+                                   interpret=req0.interpret, tile=req0.tile)
         caps, enforced = [], unit is not None
         for t in tickets:
             budget = t.request.time_budget_s
@@ -287,7 +309,7 @@ class SweepService:
         keys = jnp.concatenate(
             [scenario_keys(jax.random.PRNGKey(t.request.seed),
                            t.n_scenarios) for t in tickets], axis=0)
-        caps, enforced = self._caps_for(tickets, rcfg.max_it, b)
+        caps, enforced = self._caps_for(tickets, rcfg, b)
 
         # Warm start from the shared map pool (batch-size-independent).
         pool_key = _PoolKey(family.name)
@@ -306,15 +328,12 @@ class SweepService:
         run_s = t_done - t_start
 
         # Cost model update: wall / (trips * B) approximates the
-        # per-scenario-iteration cost; keep the MINIMUM observed so
-        # trace+compile-inflated samples (the calibration batch) never
-        # poison the estimate upward.
+        # per-scenario-iteration cost; `OnlineCost.observe` keeps the
+        # MINIMUM observed so trace+compile-inflated samples (the
+        # calibration batch) never poison the estimate upward.
         trips = max(int(res.n_it_used.max()), 1)
-        unit = run_s / (trips * b)
-        key = tickets[0].compat_key
         with self._lock:
-            old = self._cost.get(key)
-            self._cost[key] = unit if old is None else min(old, unit)
+            self._cost.observe(tickets[0].compat_key, run_s / (trips * b))
 
         # Refresh the pool with the scenario-averaged converged map.
         self.cache.put(pool_key, rcfg,
@@ -416,9 +435,10 @@ class SweepService:
         snap = self.metrics.snapshot()
         with self._lock:
             snap["cost_model"] = {
-                "classes_calibrated": len(self._cost),
-                "per_scenario_iteration_s": {
-                    str(k[0]): v for k, v in list(self._cost.items())[:8]},
+                "classes_calibrated": self._cost.classes_calibrated,
+                "per_scenario_iteration_s": self._cost.snapshot(),
+                "table": (None if self._cost.table is None
+                          else self._cost.table.source),
             }
             snap["programs_cached"] = len(self._programs)
         return snap

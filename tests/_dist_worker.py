@@ -4,8 +4,11 @@ Prints machine-readable results; exits nonzero on failure."""
 
 import os
 
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=8")
+from repro.launch import env as launch_env
+
+# Before jax initializes its backends: 8 host devices + pinned CPU platform
+# (launch.env is the one place for these process-level knobs).
+launch_env.set_host_device_count(8)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402

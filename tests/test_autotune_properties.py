@@ -1,0 +1,99 @@
+"""Hypothesis property suite for the plan autotuner (ISSUE 8, DESIGN.md §13).
+
+Four invariants the acceptance criteria name:
+
+  * every tile the tuner can consider divides the chunk AND fits the
+    kernel's VMEM footprint model (validity delegated to `ops.valid_tiles`,
+    the same oracle `_pick_tile` enforces);
+  * `make_plan(autotune=True)` never raises PlanError on a (workload,
+    backend) combination that succeeds with default knobs, and the chosen
+    knobs survive an explicit re-plan unchanged;
+  * predicted cost is monotone in ``neval`` (non-negative coefficients);
+  * tuning is deterministic for a fixed table.
+
+Skips cleanly where hypothesis is not installed (the minimal CI image).
+"""
+
+import dataclasses
+
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import VegasConfig  # noqa: E402
+from repro.core.integrands import make_cosine  # noqa: E402
+from repro.engine import ExecutionConfig, available, make_plan  # noqa: E402
+from repro.engine import autotune as at  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+
+COMMON = settings(max_examples=30, deadline=None)
+
+
+@COMMON
+@given(chunk_pow=st.integers(6, 15), d=st.integers(1, 12),
+       ninc=st.sampled_from([16, 64, 256, 1024]),
+       cubes_pow=st.integers(0, 16))
+def test_valid_tiles_divide_and_fit_vmem(chunk_pow, d, ninc, cubes_pow):
+    chunk, n_cubes = 1 << chunk_pow, 1 << cubes_pow
+    tiles = ops.valid_tiles(chunk, d, ninc, n_cubes)
+    assert tiles == sorted(tiles)
+    for t in tiles:
+        assert chunk % t == 0
+        assert ops.tile_footprint_bytes(t, d, ninc, n_cubes) <= 8 << 20
+    # the static VMEM autotune picks from the same oracle (largest valid)
+    if tiles:
+        assert ops.autotune_tile(chunk, d, ninc, n_cubes) == tiles[-1]
+    # ...and so does the tuner's candidate subset
+    for cand in at._tile_candidates(chunk, d, ninc, n_cubes):
+        assert cand is None or cand in tiles
+
+
+@COMMON
+@given(neval=st.integers(1_000, 200_000), dim=st.integers(1, 10),
+       chunk_pow=st.integers(9, 16),
+       backend=st.sampled_from(sorted(available())))
+def test_autotune_never_rejects_where_defaults_succeed(neval, dim, chunk_pow,
+                                                       backend):
+    ig = make_cosine(dim=dim)
+    kw = dict(neval=neval, max_it=4, ninc=64, chunk=1 << chunk_pow)
+    baseline = make_plan(ig, VegasConfig(
+        execution=ExecutionConfig(backend=backend), **kw))
+    tuned = make_plan(ig, VegasConfig(
+        execution=ExecutionConfig(backend=backend, autotune=True), **kw))
+    assert tuned.tuned is not None
+    assert tuned.backend.name == baseline.backend.name
+    # chosen knobs survive an explicit re-plan bit-for-bit
+    replan = make_plan(ig, VegasConfig(
+        execution=tuned.execution, **{**kw, "chunk": tuned.cfg.chunk}))
+    assert replan.cfg.chunk == tuned.cfg.chunk
+    assert replan.cfg.n_cap == tuned.cfg.n_cap
+    assert replan.execution.tile == tuned.execution.tile
+
+
+@COMMON
+@given(neval_a=st.integers(1_000, 500_000), factor=st.integers(2, 8),
+       dim=st.integers(1, 10),
+       key=st.sampled_from(sorted(at.BUILTIN_CLASSES)))
+def test_prediction_monotone_in_neval(neval_a, factor, dim, key):
+    coeffs = at.BUILTIN_TABLE.coeffs(key)
+    cfg = VegasConfig(max_it=6, chunk=4_096)
+    lo = at.predict_run_s(coeffs,
+                          dataclasses.replace(cfg, neval=neval_a).resolve(dim))
+    hi = at.predict_run_s(coeffs, dataclasses.replace(
+        cfg, neval=neval_a * factor).resolve(dim))
+    assert hi >= lo
+
+
+@COMMON
+@given(neval=st.integers(1_000, 200_000), dim=st.integers(1, 10),
+       chunk_pow=st.integers(9, 16))
+def test_tune_deterministic(neval, dim, chunk_pow):
+    ig = make_cosine(dim=dim)
+    cfg = VegasConfig(neval=neval, max_it=4, ninc=64, chunk=1 << chunk_pow,
+                      execution=ExecutionConfig(autotune=True))
+    a, ra = at.tune(ig, cfg, table=at.BUILTIN_TABLE)
+    b, rb = at.tune(ig, cfg, table=at.BUILTIN_TABLE)
+    assert a.chunk == b.chunk
+    assert a.execution == b.execution
+    assert dict(ra.chosen) == dict(rb.chosen)
