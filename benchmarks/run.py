@@ -26,6 +26,18 @@ twin (CI's bench-smoke job runs ``--only table1,batch --json --gate-fill``).
 slower — or never made one faster.  The ``calibrate`` suite (not in the
 default set's hot path, but first when selected) measures the cost-model
 grid and writes ``COST_TABLE.json`` for those autotuned rows to consume.
+
+``--gate-abs`` is the ABSOLUTE trajectory gate (ISSUE 9): every current
+fill/run row is paired with the best committed prior row of the same
+(name, backend, device_kind, interpret) — read from ``BENCH_fill.json`` /
+``BENCH_run.json`` on disk BEFORE ``--json`` overwrites them — and the gate
+fails on a >1.10x wall-clock regression.  Rows with no prior are skipped
+(a new shape/backend/device cannot regress against nothing), and so are
+rows on the generic ``device_kind="cpu"`` (absolute seconds are not
+comparable across unidentified hosts — see ``gate_abs``), so the gate
+auto-arms as real-hardware artifacts accumulate and auto-skips on silicon
+with no history — the compiled-GPU path's first run records, the second
+gates.
 """
 
 from __future__ import annotations
@@ -92,6 +104,70 @@ def gate_run(rows: list[dict]) -> list[str]:
     return failures
 
 
+#: --gate-abs failure threshold: current / best-prior wall clock.
+ABS_GATE_RATIO = 1.10
+
+
+def load_prior_rows(paths: list[str]) -> list[dict]:
+    """Prior BENCH artifact rows for ``--gate-abs`` — tolerant of missing
+    or malformed files (no history is a skip, not an error)."""
+    rows: list[dict] = []
+    for path in paths:
+        try:
+            with open(path) as f:
+                rows.extend(json.load(f).get("rows", []))
+        except (OSError, ValueError):
+            continue
+    return rows
+
+
+def gate_abs(rows: list[dict], prior_rows: list[dict],
+             ratio: float = ABS_GATE_RATIO) -> tuple[list[str], int, int]:
+    """The absolute wall-clock gate: pair each current row with the BEST
+    prior row of the same (name, backend, device_kind, interpret) and fail
+    when current > ``ratio`` x prior.  Prior rows recorded before
+    device_kind stamping match any device (legacy wildcard); rows with no
+    prior at all are skipped.  Rows whose device_kind is the generic
+    ``"cpu"`` are also skipped: that string names no actual hardware, so
+    "same device_kind" cannot hold across hosts (CI runners vs dev boxes),
+    and measured same-host run-to-run variance on the small CPU rows
+    (up to ~1.3x) swamps the threshold — absolute seconds only gate where
+    they are comparable, i.e. real accelerator rows whose device_kind is
+    a hardware model string (DESIGN.md §14.4).  Returns
+    (failures, checked, skipped)."""
+    best: dict[tuple, float] = {}
+    legacy: dict[tuple, float] = {}
+    for r in prior_rows:
+        us = r.get("us_per_call")
+        if not us:
+            continue
+        k = (r.get("name"), r.get("backend"), r.get("interpret"))
+        if r.get("device_kind") is None:
+            legacy[k] = min(legacy.get(k, us), us)
+        else:
+            kd = k + (r["device_kind"],)
+            best[kd] = min(best.get(kd, us), us)
+    failures, checked, skipped = [], 0, 0
+    for r in rows:
+        if (r.get("device_kind") or "cpu") == "cpu":
+            skipped += 1
+            continue
+        k = (r.get("name"), r.get("backend"), r.get("interpret"))
+        prior = best.get(k + (r.get("device_kind"),), legacy.get(k))
+        if prior is None:
+            skipped += 1
+            continue
+        checked += 1
+        if r["us_per_call"] > prior * ratio:
+            failures.append(
+                f"GATE: {r['name']} ({r['us_per_call']:.0f}us, "
+                f"backend={r.get('backend')} "
+                f"device_kind={r.get('device_kind')}) regressed "
+                f"{r['us_per_call'] / prior:.2f}x vs best prior "
+                f"{prior:.0f}us (limit {ratio:.2f}x)")
+    return failures, checked, skipped
+
+
 def gate_fill(rows: list[dict]) -> list[str]:
     """Pair each fused fill row with its baseline-pallas twin; return a
     failure message per pair where fused is slower."""
@@ -128,9 +204,26 @@ def main() -> None:
                     help="exit nonzero if an autotuned run is slower than "
                          "its default-knob twin on any measured shape, or "
                          "if autotuning never won")
+    ap.add_argument("--gate-abs", action="store_true",
+                    help="exit nonzero if any fill/run row regressed more "
+                         "than 1.10x vs the best prior BENCH row of the "
+                         "same (name, backend, device_kind, interpret); "
+                         "rows with no prior are skipped")
     args = ap.parse_args()
     fast = not args.full
     only = set(filter(None, args.only.split(",")))
+
+    # --gate-abs priors must be read BEFORE --json overwrites the artifacts:
+    # the committed repo copies (cwd) plus any previous copies in the --json
+    # output directory.
+    prior_rows: list[dict] = []
+    if args.gate_abs:
+        dirs = ["."]
+        if args.json:
+            dirs.append(os.path.dirname(os.path.abspath(args.json)))
+        prior_rows = load_prior_rows(
+            [os.path.join(d, f) for d in dict.fromkeys(dirs)
+             for f in ("BENCH_fill.json", "BENCH_run.json")])
 
     from . import (bench_applications, bench_batch, bench_breakdown,
                    bench_calibrate, bench_grad, bench_integrands,
@@ -217,6 +310,17 @@ def main() -> None:
                 if r["name"].startswith("run/autotune/")
                 and r["name"].endswith("/autotuned"))
         print(f"# run gate OK ({n} autotuned shapes measured)",
+              file=sys.stderr)
+
+    if args.gate_abs:
+        failures, checked, skipped = gate_abs(
+            fill_rows(common.ROWS) + run_rows(common.ROWS), prior_rows)
+        for msg in failures:
+            print(msg, file=sys.stderr)
+        if failures:
+            sys.exit(2)
+        print(f"# abs gate OK ({checked} rows checked vs prior, "
+              f"{skipped} skipped: generic-cpu or no prior)",
               file=sys.stderr)
 
 

@@ -82,20 +82,31 @@ def device_kind() -> str:
 
 
 def class_key(backend: str, interpret: bool | None = None) -> str:
-    """The cost-model class of a (backend, execution-mode) pair.
+    """The cost-model class of a (backend, execution-mode) pair, qualified
+    by the device that produced the timings (``'ref@cpu'``,
+    ``'pallas-gpu|compiled@NVIDIA H100'``).
 
-    Backends without an ``interpret`` knob key by name alone (``'ref'``);
-    pallas backends split interpreter vs compiled-Mosaic timings into
-    separate classes (``'pallas-fused|interpret'``) because the two are
-    orders of magnitude apart — one fitted line cannot cover both.
+    Backends without an ``interpret`` knob key by name alone; pallas
+    backends split interpreter vs compiled timings into separate classes
+    (``'pallas-fused|interpret'``) because the two are orders of magnitude
+    apart — one fitted line cannot cover both.  The execution mode resolves
+    against the backend's declared ``family`` (Mosaic kernels compile on
+    TPU, the Triton one on GPU), and the ``@device_kind`` qualifier keeps
+    timings from different silicon apart the same way — an A100 fit must
+    not predict for an H100.  Lookup falls back to the unqualified class
+    (`CostTable.coeffs`), so pre-qualification tables keep working.
     """
     from repro import kernels
     from . import backends as backends_mod
     spec = backends_mod.get(backend)
     if "interpret" not in spec.knobs:
-        return backend
-    mode = "interpret" if kernels.resolve_interpret(interpret) else "compiled"
-    return f"{backend}|{mode}"
+        base = backend
+    else:
+        mode = ("interpret"
+                if kernels.resolve_interpret(interpret, spec.family)
+                else "compiled")
+        base = f"{backend}|{mode}"
+    return f"{base}@{device_kind()}"
 
 
 # --- the fitted model --------------------------------------------------------
@@ -164,6 +175,17 @@ BUILTIN_CLASSES: Mapping[str, ClassCoeffs] = {
     "pallas-fused|compiled": ClassCoeffs(c_fixed=1e-4, c_eval_dim=2e-10,
                                          c_chunk=2e-5, c_tile_step=2e-6,
                                          iter_overhead_s=2e-4),
+    # The Triton kernel interprets a little slower than the Mosaic one (the
+    # per-block one-hot partials cost more under the interpreter than the
+    # windowed matmul); compiled estimates sit at the paper's GPU fill
+    # throughput order of magnitude (cuVegas Table 1, ~1e9 evals/s) until a
+    # real-GPU calibration lands a measured '...@<device_kind>' class.
+    "pallas-gpu|interpret": ClassCoeffs(c_fixed=5e-3, c_eval_dim=4e-6,
+                                        c_chunk=2e-3, c_tile_step=2e-4,
+                                        iter_overhead_s=1e-3),
+    "pallas-gpu|compiled": ClassCoeffs(c_fixed=5e-5, c_eval_dim=3e-10,
+                                       c_chunk=1e-5, c_tile_step=1e-6,
+                                       iter_overhead_s=2e-4),
 }
 
 
@@ -180,19 +202,28 @@ class CostTable:
         default_factory=dict)
 
     def coeffs(self, key: str) -> ClassCoeffs:
-        """Coefficients for a class, falling back sibling-mode -> builtin ->
-        ref so prediction never KeyErrors (an uncalibrated class still gets
-        order-of-magnitude-sane relative choices)."""
-        got = self.classes.get(key)
-        if got is not None:
-            return got
-        if "|" in key:
-            name, mode = key.split("|", 1)
-            other = f"{name}|{'compiled' if mode == 'interpret' else 'interpret'}"
-            got = self.classes.get(other)
+        """Coefficients for a class, falling back exact -> device-qualified
+        sibling mode -> unqualified -> unqualified sibling -> builtin -> ref
+        so prediction never KeyErrors (an uncalibrated class still gets
+        order-of-magnitude-sane relative choices, and a table calibrated
+        before device qualification keeps serving qualified lookups)."""
+        base, _, dev = key.partition("@")
+        sib = None
+        if "|" in base:
+            name, mode = base.split("|", 1)
+            sib = f"{name}|{'compiled' if mode == 'interpret' else 'interpret'}"
+        tries = [key]
+        if dev:
+            if sib:
+                tries.append(f"{sib}@{dev}")
+            tries.append(base)
+        if sib:
+            tries.append(sib)
+        for k in tries:
+            got = self.classes.get(k)
             if got is not None:
                 return got
-        return BUILTIN_CLASSES.get(key) or BUILTIN_CLASSES["ref"]
+        return BUILTIN_CLASSES.get(base) or BUILTIN_CLASSES["ref"]
 
     def to_json(self) -> dict:
         return {
@@ -326,10 +357,12 @@ def _time_steady(fn, *args, repeats: int = 2) -> float:
 
 
 def _fill_sample(backend: str, dim: int, neval: int, chunk: int,
-                 tile: int | None, *, ninc: int = 64,
-                 repeats: int = 2) -> dict:
+                 step: int | None, *, step_knob: str = "tile",
+                 ninc: int = 64, repeats: int = 2) -> dict:
     """Time one jitted steady-state fill of one (backend, shape, knob)
-    point; returns the fitted-feature sample."""
+    point; returns the fitted-feature sample.  ``step`` is the backend's
+    grid-step knob (``tile`` on the Mosaic kernels, ``block`` on the Triton
+    one) — both fit the same per-grid-step cost feature."""
     import functools
 
     import jax
@@ -341,7 +374,7 @@ def _fill_sample(backend: str, dim: int, neval: int, chunk: int,
     from .config import ExecutionConfig
     from . import backends as backends_mod
 
-    execution = ExecutionConfig(backend=backend, tile=tile)
+    execution = ExecutionConfig(backend=backend, **{step_knob: step})
     cfg = core.VegasConfig(neval=neval, ninc=ninc, chunk=chunk,
                            execution=execution)
     rcfg = cfg.resolve(dim)
@@ -354,7 +387,7 @@ def _fill_sample(backend: str, dim: int, neval: int, chunk: int,
         lambda e, n, k, f: f(e, n, k, ig), f=fill_fn))
     seconds = _time_steady(prog, edges, n_h, key, repeats=repeats)
     return dict(b=1, d=dim, n_cap=rcfg.n_cap,
-                n_chunks=rcfg.n_cap // rcfg.chunk, tile=tile,
+                n_chunks=rcfg.n_cap // rcfg.chunk, tile=step,
                 chunk=rcfg.chunk, neval=neval, seconds=seconds)
 
 
@@ -407,23 +440,27 @@ def calibrate(*, fast: bool = True, backends: tuple[str, ...] | None = None,
     for backend in backends:
         spec = backends_mod.get(backend)
         key = class_key(backend)
-        pallas = "tile" in spec.knobs
-        grid = ((_PALLAS_GRID_FAST if fast else _PALLAS_GRID_FULL) if pallas
+        step_knob = next((k for k in ("tile", "block") if k in spec.knobs),
+                         None)
+        grid = ((_PALLAS_GRID_FAST if fast else _PALLAS_GRID_FULL)
+                if step_knob
                 else (_REF_GRID_FAST if fast else _REF_GRID_FULL))
         samples = []
         for d in grid["dims"]:
             for neval in grid["nevals"]:
                 for chunk in grid["chunks"]:
-                    for tile in grid.get("tiles", (None,)) if pallas \
+                    for step in grid.get("tiles", (None,)) if step_knob \
                             else (None,):
-                        s = _fill_sample(backend, d, neval, chunk, tile,
+                        s = _fill_sample(backend, d, neval, chunk, step,
+                                         step_knob=step_knob or "tile",
                                          repeats=repeats)
                         s["class"] = key
                         samples.append(s)
                         if emit is not None:
                             emit(f"calibrate/{key}/d={d}/neval={neval}"
                                  f"/chunk={s['chunk']}"
-                                 + (f"/tile={tile}" if tile else ""), s)
+                                 + (f"/{step_knob}={step}" if step else ""),
+                                 s)
         classes[key] = dataclasses.replace(fit_class(samples),
                                            iter_overhead_s=overhead)
     return CostTable(device_kind=device_kind(),
@@ -466,8 +503,11 @@ class TuneReport:
         def fmt(knobs):
             return " ".join(f"{k}={v}" for k, v in knobs.items()
                             if v is not None)
+        # class_key already carries the live @device_kind qualifier; the
+        # device_kind FIELD is the table's own provenance, shown only via
+        # table= (a builtin table reports 'unknown').
         same = dict(self.chosen) == dict(self.default)
-        return (f"autotuned[{self.class_key}@{self.device_kind}, "
+        return (f"autotuned[{self.class_key}, "
                 f"table={self.table_source}] "
                 f"{fmt(self.chosen)} (predicted {self.predicted_s:.3g}s"
                 + (", same as default" if same else
@@ -480,15 +520,22 @@ def _is_family(workload) -> bool:
     return hasattr(workload, "params") and hasattr(workload, "bind")
 
 
-def _tile_candidates(chunk: int, d: int, ninc: int, n_cubes: int) -> list:
-    """A small predicted-orderable subset of the kernel's valid tiles: the
-    static VMEM-autotune choice plus the power-of-two divisors >= 8.  All
-    candidates come from ``ops.valid_tiles`` — the kernel's own validity
-    oracle — so the tuner can never pick a tile ``_pick_tile`` rejects."""
-    from repro.kernels import ops
-    valid = ops.valid_tiles(chunk, d, ninc, n_cubes)
+def _step_candidates(step_knob: str, chunk: int, d: int, ninc: int,
+                     n_cubes: int) -> list:
+    """A small predicted-orderable subset of the kernel's valid grid steps
+    (``tile`` on the Mosaic kernels, ``block`` on the Triton one): the
+    static-autotune choice plus the power-of-two divisors >= 8.  All
+    candidates come from the kernel's own validity oracle
+    (``ops.valid_tiles`` / ``gpu_fill.valid_blocks``), so the tuner can
+    never pick a step ``_pick_tile``/``_pick_block`` rejects."""
+    if step_knob == "block":
+        from repro.kernels import gpu_fill
+        valid = gpu_fill.valid_blocks(chunk, d, ninc)
+    else:
+        from repro.kernels import ops
+        valid = ops.valid_tiles(chunk, d, ninc, n_cubes)
     if not valid:
-        return [None]     # let _pick_tile raise its own diagnostic
+        return [None]     # let the kernel's own picker raise its diagnostic
     pow2 = [t for t in valid if t >= 8 and (t & (t - 1)) == 0]
     cands = sorted(set(pow2[-3:]) | {valid[-1]}, reverse=True)
     return cands or [valid[-1]]
@@ -525,15 +572,20 @@ def tune(workload, cfg, *, table: CostTable | None = None):
     family = _is_family(workload)
     b = workload.batch_size if family else 1
     probe_exec = dataclasses.replace(execution, autotune=False)
-    has_tile_knob = "tile" in spec.knobs
+    step_knob = next((k for k in ("tile", "block") if k in spec.knobs), None)
+    pinned_step = getattr(execution, step_knob) if step_knob else None
 
     # The default-knob baseline the report compares against.
     base_rcfg = cfg.resolve(dim)
-    default_tile = execution.tile
-    if has_tile_knob and default_tile is None:
+    default_step = pinned_step
+    if step_knob == "tile" and default_step is None:
         from repro.kernels import ops
-        default_tile = ops.autotune_tile(base_rcfg.chunk, dim,
+        default_step = ops.autotune_tile(base_rcfg.chunk, dim,
                                          base_rcfg.ninc, base_rcfg.n_cubes)
+    elif step_knob == "block" and default_step is None:
+        from repro.kernels import gpu_fill
+        default_step = gpu_fill.autotune_block(base_rcfg.chunk, dim,
+                                               base_rcfg.ninc)
     mesh = execution.mesh
     default_axes = (execution.shard_axes if execution.shard_axes is not None
                     else (tuple(mesh.axis_names) if mesh is not None else None))
@@ -544,16 +596,17 @@ def tune(workload, cfg, *, table: CostTable | None = None):
     default_vmap = family and (default_batch == "vmap" or (
         default_batch == "auto" and vmappable))
 
-    def predict(rcfg, tile, n_shards, vmapped):
+    def predict(rcfg, step, n_shards, vmapped):
+        # tile= is the generic per-grid-step feature; block fits it too.
         if vmapped or not family:
-            return predict_run_s(coeffs, rcfg, b=b, tile=tile,
+            return predict_run_s(coeffs, rcfg, b=b, tile=step,
                                  n_shards=n_shards)
         # Serial family: B independent programs, each paying c_fixed +
         # overhead on its own.
-        return b * predict_run_s(coeffs, rcfg, b=1, tile=tile,
+        return b * predict_run_s(coeffs, rcfg, b=1, tile=step,
                                  n_shards=n_shards)
 
-    predicted_default = predict(base_rcfg, default_tile, default_shards,
+    predicted_default = predict(base_rcfg, default_step, default_shards,
                                 default_vmap)
 
     # --- candidate enumeration ----------------------------------------------
@@ -575,30 +628,31 @@ def tune(workload, cfg, *, table: CostTable | None = None):
     for chunk in chunk_cands:
         ccfg = dataclasses.replace(cfg, chunk=chunk, execution=probe_exec)
         rcfg = ccfg.resolve(dim)
-        tiles = ([execution.tile] if not has_tile_knob
-                 or execution.tile is not None
-                 else _tile_candidates(rcfg.chunk, dim, rcfg.ninc,
-                                       rcfg.n_cubes))
-        for tile in tiles:
+        steps = ([pinned_step] if step_knob is None
+                 or pinned_step is not None
+                 else _step_candidates(step_knob, rcfg.chunk, dim,
+                                       rcfg.ninc, rcfg.n_cubes))
+        for step in steps:
             for axes in axes_cands:
                 n_sh = (sharding_mod.mesh_shard_count(mesh, axes)
                         if mesh is not None and axes else 1)
                 for bm in batch_cands:
-                    pred = predict(rcfg, tile, n_sh, bm != "serial")
-                    combos.append((pred, chunk, tile, axes, bm))
+                    pred = predict(rcfg, step, n_sh, bm != "serial")
+                    combos.append((pred, chunk, step, axes, bm))
     # Stable sort on predicted cost alone: equal predictions keep candidate
     # order, and the caller's own chunk sorts via its position in the sorted
     # candidate list — deterministic for a fixed table (property-tested).
     combos.sort(key=lambda c: c[0])
 
     # --- probe: validity is make_plan's, not ours ---------------------------
-    for pred, chunk, tile, axes, bm in combos:
-        # A tile on a backend without the knob is forwarded unchanged so the
-        # probe (and the fallback) surface make_plan's own knob PlanError —
-        # the tuner must never launder an invalid pin into a valid plan.
+    for pred, chunk, step, axes, bm in combos:
+        # A tile/block on a backend without the knob is forwarded unchanged
+        # (it rides along inside probe_exec) so the probe — and the fallback
+        # — surface make_plan's own knob PlanError: the tuner must never
+        # launder an invalid pin into a valid plan.
         cand_exec = dataclasses.replace(
             probe_exec, shard_axes=axes, batch=bm,
-            tile=tile if has_tile_knob else execution.tile)
+            **({step_knob: step} if step_knob else {}))
         cand_cfg = dataclasses.replace(cfg, chunk=chunk,
                                        execution=cand_exec)
         try:
@@ -608,11 +662,12 @@ def tune(workload, cfg, *, table: CostTable | None = None):
         report = TuneReport(
             class_key=key, table_source=table.source,
             device_kind=table.device_kind,
-            chosen=dict(chunk=cand_cfg.resolve(dim).chunk, tile=tile,
-                        batch=bm, shard_axes=axes),
-            default=dict(chunk=base_rcfg.chunk, tile=default_tile,
-                         batch=execution.batch,
-                         shard_axes=execution.shard_axes),
+            chosen=dict(chunk=cand_cfg.resolve(dim).chunk, batch=bm,
+                        shard_axes=axes,
+                        **({step_knob: step} if step_knob else {})),
+            default=dict(chunk=base_rcfg.chunk, batch=execution.batch,
+                         shard_axes=execution.shard_axes,
+                         **({step_knob: default_step} if step_knob else {})),
             predicted_s=pred, predicted_default_s=predicted_default)
         return cand_cfg, report
     # Nothing the model proposed validates (e.g. an exotic workload the

@@ -68,6 +68,9 @@ class BackendSpec:
     knobs: tuple[str, ...] = ()       # ExecutionConfig fields forwarded as kwargs
     fixed: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     dtypes: tuple[str, ...] = ("float32",)
+    family: str = "tpu"               # platform that compiles this kernel
+                                      # natively (kernels.resolve_interpret);
+                                      # irrelevant without an 'interpret' knob
     doc: str = ""
 
     def supports(self, capability: str) -> bool:
@@ -167,4 +170,16 @@ register(BackendSpec(
     fixed={"fused_cubes": True},
     dtypes=("float32",),
     doc="P-V3 streaming kernel: in-kernel RNG + in-kernel cube moments",
+))
+
+register(BackendSpec(
+    name="pallas-gpu",
+    fill=fill_mod.fill_pallas_gpu,
+    capabilities=frozenset({SHARDABLE, VMAPPABLE, IN_KERNEL_RNG,
+                            CLOSURE_HOISTING, EARLY_STOP}),
+    knobs=("interpret", "block", "num_warps"),
+    dtypes=("float32",),
+    family="gpu",
+    doc="Triton-lowered fill: scatter/atomic cube accumulation, "
+        "block-privatized histograms, in-kernel RNG (DESIGN.md §14)",
 ))

@@ -76,6 +76,14 @@ def make_plan(workload, cfg: core.VegasConfig | None = None,
         execution = cfg.execution
     elif execution is not cfg.execution:
         cfg = cfg.with_execution(execution)
+    if execution.backend == "auto":
+        # Resolve the platform default (pallas-fused on TPU, pallas-gpu on
+        # GPU, ref elsewhere) BEFORE the autotuner and the capability checks,
+        # so both see the concrete backend and the Plan records it.
+        from repro import kernels
+        execution = dataclasses.replace(
+            execution, backend=kernels.backend_default())
+        cfg = cfg.with_execution(execution)
     tuned = None
     if execution.autotune:
         # §13: the cost-model chooser replaces cfg's chunk/tile/batch/shard

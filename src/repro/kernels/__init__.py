@@ -1,12 +1,21 @@
 """Pallas kernel layer: the fill hot-spot the paper optimizes with a custom
-CUDA kernel (vegas_fill.py + ops.py + ref.py) plus the interpret/compiled
-mode policy shared by every caller.
+CUDA kernel (vegas_fill.py + gpu_fill.py + ops.py + ref.py) plus the
+platform policy shared by every caller.
 
-``interpret=None`` (the default everywhere) autodetects: compiled Mosaic on a
-real TPU, the Pallas interpreter elsewhere.  Explicit True/False is honored
-but logged loudly — the historical failure mode was ``interpret=True``
-silently running the (orders-of-magnitude slower) interpreter on real
-accelerators.
+Two policies live here:
+
+  * :func:`backend_default` — the platform-default REGISTRY BACKEND:
+    ``'pallas-fused'`` on TPU (the Mosaic-lowered P-V3 kernel),
+    ``'pallas-gpu'`` on GPU (the Triton-lowered scatter kernel),
+    ``'ref'`` everywhere else.  Logs the detected ``device_kind`` once —
+    the same key the cost tables are qualified by (`engine.autotune`).
+  * :func:`resolve_interpret` — the per-kernel-family execution mode.
+    ``interpret=None`` (the default everywhere) autodetects: compiled on
+    the family's native platform (Mosaic on TPU for ``family='tpu'``,
+    Triton on GPU for ``family='gpu'``), the Pallas interpreter elsewhere.
+    Explicit True/False is honored but logged loudly — the historical
+    failure mode was ``interpret=True`` silently running the
+    (orders-of-magnitude slower) interpreter on real accelerators.
 """
 
 from __future__ import annotations
@@ -18,38 +27,69 @@ import jax
 
 log = logging.getLogger("repro.kernels")
 
+#: Which registry backend each platform compiles natively.
+PLATFORM_BACKENDS = {"tpu": "pallas-fused", "gpu": "pallas-gpu"}
 
-def backend_default() -> str:
-    """Autodetected Pallas execution mode for this process: ``'compiled'``
-    on a real TPU, ``'interpret'`` everywhere else (CPU CI, GPU — the kernel
-    is written against the TPU/Mosaic lowering)."""
-    return "compiled" if jax.default_backend() == "tpu" else "interpret"
+_FAMILY_COMPILER = {"tpu": "Mosaic", "gpu": "Triton"}
+
+
+def device_kind() -> str:
+    """The detected accelerator model (``'cpu'`` / ``'TPU v4'`` /
+    ``'NVIDIA H100 ...'``) — the key BENCH rows and cost-table classes are
+    qualified by, so numbers from different silicon never mix."""
+    try:
+        return jax.devices()[0].device_kind
+    except Exception:
+        return "unknown"
 
 
 @functools.lru_cache(maxsize=None)
-def _announce(platform: str, mode: str, source: str) -> None:
+def _announce_default(platform: str, kind: str, name: str) -> None:
+    log.info("Platform-default fill backend: %s (platform=%s, "
+             "device_kind=%s)", name, platform, kind)
+
+
+def backend_default() -> str:
+    """The registry backend this platform compiles natively:
+    ``'pallas-fused'`` on TPU, ``'pallas-gpu'`` on GPU, ``'ref'`` elsewhere
+    (CPU CI — where the pallas backends still run, interpreted, when asked
+    for explicitly).  Logs the detected ``device_kind`` once per process;
+    ``ExecutionConfig(backend='auto')`` resolves through this."""
+    platform = jax.default_backend()
+    name = PLATFORM_BACKENDS.get(platform, "ref")
+    _announce_default(platform, device_kind(), name)
+    return name
+
+
+@functools.lru_cache(maxsize=None)
+def _announce(platform: str, family: str, mode: str, source: str) -> None:
+    native = _FAMILY_COMPILER.get(family, "native")
     msg = (f"Pallas fill mode: {mode.upper()} on platform={platform} "
-           f"({source})")
-    if mode == "interpret" and platform == "tpu":
-        log.warning("%s — the interpreter is orders of magnitude slower than "
-                    "compiled Mosaic; pass interpret=None to autodetect", msg)
-    elif mode == "compiled" and platform != "tpu":
-        log.warning("%s — compiled Pallas is only supported on TPU; this "
-                    "will likely fail to lower", msg)
+           f"[{family} kernel] ({source})")
+    if mode == "interpret" and platform == family:
+        log.warning("%s — the interpreter is orders of magnitude slower "
+                    "than compiled %s; pass interpret=None to autodetect",
+                    msg, native)
+    elif mode == "compiled" and platform != family:
+        log.warning("%s — compiled %s lowering is only supported on "
+                    "%s; this will likely fail to lower", msg, native,
+                    family.upper())
     else:
         log.info("%s", msg)
 
 
-def resolve_interpret(interpret: bool | None) -> bool:
+def resolve_interpret(interpret: bool | None, family: str = "tpu") -> bool:
     """Resolve the tri-state ``interpret`` flag to a concrete bool, logging
-    the choice once per (platform, flag) combination."""
+    the choice once per (platform, family, flag) combination.  ``family``
+    names the platform whose compiler lowers this kernel natively
+    (``'tpu'`` for the Mosaic kernels, ``'gpu'`` for the Triton one)."""
     platform = jax.default_backend()
     if interpret is None:
-        chosen = backend_default() == "interpret"
-        _announce(platform, "interpret" if chosen else "compiled",
+        chosen = platform != family
+        _announce(platform, family, "interpret" if chosen else "compiled",
                   "autodetected, interpret=None")
     else:
         chosen = bool(interpret)
-        _announce(platform, "interpret" if chosen else "compiled",
+        _announce(platform, family, "interpret" if chosen else "compiled",
                   f"explicit interpret={chosen}")
     return chosen

@@ -25,18 +25,46 @@ import os
 import re
 import warnings
 
-#: The documented XLA GPU performance profile for compiled-GPU benchmark
-#: rows: triton fusion/gemm + async collectives with latency-hiding
-#: scheduling.  Harmless on CPU/TPU (unknown flags are rejected loudly by
-#: XLA only when a GPU backend consumes them), but only installed on
-#: request (``set_platform(..., gpu_flags=True)`` or ``--gpu-flags``).
-XLA_GPU_PERF_FLAGS = (
-    "--xla_gpu_enable_triton_softmax_fusion=true "
-    "--xla_gpu_triton_gemm_any=True "
-    "--xla_gpu_enable_async_collectives=true "
-    "--xla_gpu_enable_latency_hiding_scheduler=true "
-    "--xla_gpu_enable_highest_priority_async_stream=true"
-)
+#: The documented GPU launch profile: every XLA flag the compiled-GPU
+#: benchmark rows run under, with the rationale each flag is there for.
+#: The set follows the published JAX GPU performance guidance (the same
+#: profile SNIPPETS.md's upstream launchers install); the mapping is the
+#: documentation — ``describe_gpu_profile()`` renders it, and the flag
+#: string itself (:data:`XLA_GPU_PERF_FLAGS`) is derived from the keys so
+#: the two can never drift apart.
+GPU_LAUNCH_PROFILE = {
+    "--xla_gpu_enable_triton_softmax_fusion=true":
+        "fuse softmax-shaped reductions through Triton instead of cuDNN "
+        "calls — keeps the fill's normalize/accumulate epilogues in one "
+        "kernel",
+    "--xla_gpu_triton_gemm_any=True":
+        "let Triton codegen any GEMM (not just flagged ones), so the "
+        "one-hot fallbacks lower next to the surrounding fusion rather "
+        "than bouncing to cuBLAS",
+    "--xla_gpu_enable_async_collectives=true":
+        "overlap the sharded fill's cross-device partial-moment reductions "
+        "with compute (the C5 chunk contract makes shards independent "
+        "until the final sum)",
+    "--xla_gpu_enable_latency_hiding_scheduler=true":
+        "schedule HBM loads/collectives ahead of their consumers — the "
+        "fill is bandwidth-bound between kernel launches",
+    "--xla_gpu_enable_highest_priority_async_stream=true":
+        "give the async-collective stream top priority so a small "
+        "all-reduce never waits behind a long fill kernel",
+}
+
+#: Space-joined form of :data:`GPU_LAUNCH_PROFILE` for ``XLA_FLAGS``.
+#: Harmless on CPU/TPU (unknown flags are rejected loudly by XLA only when
+#: a GPU backend consumes them), but only installed on request
+#: (``set_platform(..., gpu_flags=True)`` or ``--gpu-flags``).
+XLA_GPU_PERF_FLAGS = " ".join(GPU_LAUNCH_PROFILE)
+
+
+def describe_gpu_profile() -> str:
+    """Human-readable flag -> rationale table (``--gpu-flags`` + ``--plan``
+    and README's GPU quickstart render this)."""
+    return "\n".join(f"{flag}\n    {why}"
+                     for flag, why in GPU_LAUNCH_PROFILE.items())
 
 _TRUTHY = ("1", "true", "yes", "on")
 

@@ -41,15 +41,25 @@ INTEGRANDS = {
 
 def add_execution_args(ap: argparse.ArgumentParser) -> None:
     """The shared execution-axis flags (integrate + sweep CLIs)."""
-    ap.add_argument("--backend", choices=sorted(available()), default="ref",
+    ap.add_argument("--backend",
+                    choices=sorted(available()) + ["auto"], default="ref",
                     help="fill backend from the engine registry "
-                         "(pallas-fused = P-V3 streaming kernel)")
+                         "(pallas-fused = P-V3 streaming kernel, pallas-gpu "
+                         "= Triton scatter kernel; auto = platform default "
+                         "via kernels.backend_default)")
     ap.add_argument("--interpret", choices=["auto", "true", "false"],
                     default="auto",
-                    help="pallas execution mode; auto = compiled on TPU, "
-                         "interpreter elsewhere (kernels.backend_default)")
+                    help="pallas execution mode; auto = compiled on the "
+                         "kernel's native platform (Mosaic on TPU, Triton "
+                         "on GPU), interpreter elsewhere "
+                         "(kernels.resolve_interpret)")
     ap.add_argument("--tile", type=int, default=None,
-                    help="pallas tile override (default: VMEM autotune)")
+                    help="pallas TPU tile override (default: VMEM autotune)")
+    ap.add_argument("--block", type=int, default=None,
+                    help="pallas-gpu evals per program (default: "
+                         "shared-memory autotune, gpu_fill.autotune_block)")
+    ap.add_argument("--num-warps", type=int, default=None,
+                    help="pallas-gpu Triton num_warps override")
     ap.add_argument("--autotune", action="store_true",
                     help="pick chunk/tile/batch/shard knobs from the "
                          "measured cost model (engine.autotune, §13); "
@@ -84,8 +94,9 @@ def add_execution_args(ap: argparse.ArgumentParser) -> None:
 
 
 def build_execution(args, **extra) -> ExecutionConfig:
-    # interpret/tile are forwarded as given; the plan validator rejects them
-    # loudly when the chosen backend declares no such knob.
+    # interpret/tile/block/num_warps are forwarded as given; the plan
+    # validator rejects them loudly when the chosen backend declares no
+    # such knob.
     interpret = {"auto": None, "true": True, "false": False}[args.interpret]
     mesh = None
     if args.shard:
@@ -99,9 +110,10 @@ def build_execution(args, **extra) -> ExecutionConfig:
     grad = (GradPolicy(mode=args.grad, with_sdev=not args.no_grad_sdev)
             if args.grad != "off" else None)
     return ExecutionConfig(backend=args.backend, interpret=interpret,
-                           tile=args.tile, mesh=mesh, stop=stop, grad=grad,
-                           autotune=args.autotune, cost_table=args.cost_table,
-                           **extra)
+                           tile=args.tile, block=args.block,
+                           num_warps=args.num_warps, mesh=mesh, stop=stop,
+                           grad=grad, autotune=args.autotune,
+                           cost_table=args.cost_table, **extra)
 
 
 def main(argv=None):

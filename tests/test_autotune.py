@@ -55,7 +55,7 @@ def test_calibrate_ref_only_fits_and_saves(tmp_path):
     table = at.calibrate(fast=True, backends=("ref",), repeats=1)
     assert table.source == "calibrated"
     assert table.jax_backend == jax.default_backend()
-    c = table.classes["ref"]
+    c = table.classes[at.class_key("ref")]   # device_kind-qualified
     assert c.n_samples >= 6
     for f in ("c_fixed", "c_eval_dim", "c_chunk", "c_tile_step",
               "iter_overhead_s"):
@@ -64,7 +64,7 @@ def test_calibrate_ref_only_fits_and_saves(tmp_path):
     assert c.fill_s(b=1, d=10, n_cap=1 << 17, n_chunks=8) > 0.0
     path = table.save(str(tmp_path / "COST_TABLE.json"))
     loaded = at.CostTable.load(path)
-    assert loaded.classes["ref"] == c
+    assert loaded.classes[at.class_key("ref")] == c
 
 
 # --- table persistence + resolution ------------------------------------------
@@ -116,7 +116,7 @@ def test_tune_reduces_ncap_padding_on_high_dim_shape():
     plan = make_plan(ig, cfg)
     rep = plan.tuned
     assert rep is not None
-    assert rep.class_key == "ref"
+    assert rep.class_key == at.class_key("ref")   # 'ref@<device_kind>'
     assert plan.cfg.chunk < 16_384
     assert plan.cfg.n_cap < 114_688          # strictly less padded
     assert rep.predicted_s <= rep.predicted_default_s
@@ -305,6 +305,36 @@ def test_gate_run_pairing():
     # unrelated run/* rows never pair
     assert any("nothing to check" in f
                for f in gate_run([_row("run/roos_arnold/ref", 50.0)]))
+
+
+def test_gate_abs_pairing():
+    from benchmarks.run import gate_abs
+
+    def row(name, us, dk, backend="pallas_gpu", interpret=False):
+        return {"name": name, "us_per_call": us, "device_kind": dk,
+                "backend": backend, "interpret": interpret}
+
+    a100 = "NVIDIA A100-SXM4-40GB"
+    prior = [row("f/x", 100.0, a100), row("f/x", 90.0, a100),  # best = 90
+             row("f/y", 100.0, None)]                          # legacy row
+    # within threshold vs the BEST prior -> checked, no failure
+    fails, checked, skipped = gate_abs([row("f/x", 98.0, a100)], prior)
+    assert (fails, checked, skipped) == ([], 1, 0)
+    # regression beyond 1.10x -> named failure with the ratio
+    fails, checked, _ = gate_abs([row("f/x", 120.0, a100)], prior)
+    assert checked == 1 and any("1.33x" in f and "f/x" in f for f in fails)
+    # a legacy (unstamped) prior matches any REAL device_kind
+    fails, checked, _ = gate_abs([row("f/y", 99.0, a100)], prior)
+    assert (fails, checked) == ([], 1)
+    # generic-cpu rows and no-prior rows are skipped, never failed
+    fails, checked, skipped = gate_abs(
+        [row("f/x", 500.0, "cpu"), row("f/x", 500.0, None),
+         row("f/new", 500.0, a100)], prior)
+    assert (fails, checked, skipped) == ([], 0, 3)
+    # interpret mode is part of the pairing key
+    fails, checked, skipped = gate_abs(
+        [row("f/x", 500.0, a100, interpret=True)], prior)
+    assert (fails, checked, skipped) == ([], 0, 1)
 
 
 def test_emit_rows_carry_device_kind():

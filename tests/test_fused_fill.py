@@ -282,16 +282,18 @@ def test_fused_jaxpr_no_ncap_array_any_dtype():
 
 def test_backend_default_and_resolve_on_cpu(caplog):
     assert jax.default_backend() == "cpu"
-    assert K.backend_default() == "interpret"
+    assert K.backend_default() == "ref"  # neither TPU nor GPU -> ref
     K._announce.cache_clear()
     with caplog.at_level("INFO", logger="repro.kernels"):
         assert K.resolve_interpret(None) is True
         assert K.resolve_interpret(True) is True
         assert K.resolve_interpret(False) is False  # honored but warned
+        assert K.resolve_interpret(None, family="gpu") is True
     text = caplog.text
     assert "INTERPRET on platform=cpu" in text
     assert "autodetected" in text
     assert "only supported on TPU" in text  # the loud explicit-False warning
+    assert "[gpu kernel]" in text  # family tag in the announce line
     K._announce.cache_clear()
 
 

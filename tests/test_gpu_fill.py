@@ -1,0 +1,256 @@
+"""The pallas-gpu backend (ISSUE 9, DESIGN.md §14): block knob model and
+autotune, in-kernel RNG bit-exactness vs the host stream, ref-oracle parity
+at scatter-stressing shapes, shard/vmap composition, the PlanError matrix
+for its capability/knob declarations, and the platform-default resolution
+(``backend='auto'``).
+
+Everything here runs the kernel through the Pallas INTERPRETER on CPU (the
+grid executes sequentially, atomics degenerate to plain adds, results are
+deterministic); the compiled-Triton path needs real GPU silicon and
+auto-skips with an explicit reason.  The parity sweep proper (ref vs
+pallas-fused vs pallas-gpu across shapes) lives in test_fill_parity.py.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import kernels as K
+from repro.core import VegasConfig
+from repro.core import fill as fill_mod
+from repro.core import strat
+from repro.core import integrands as igs
+from repro.engine import ExecutionConfig, PlanError, make_plan
+from repro.kernels import gpu_fill
+
+requires_gpu = pytest.mark.skipif(
+    jax.default_backend() != "gpu",
+    reason="compiled pallas-gpu needs a GPU backend (jax.default_backend()"
+           f"={jax.default_backend()!r}); interpret-mode coverage of the "
+           "same program runs on CPU in this suite")
+
+
+def _ig(x):
+    return jnp.prod(1.0 / (0.1 + (x - 0.3) ** 2), axis=-1)
+
+
+def _setup(dim=3, nstrat=3, ninc=32, neval=None, seed=7):
+    n_cubes = nstrat**dim
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (dim, ninc),
+                           minval=0.05, maxval=1.0)
+    w = w / w.sum(1, keepdims=True)
+    edges = jnp.concatenate(
+        [jnp.zeros((dim, 1)), jnp.cumsum(w, axis=1)], axis=1)
+    n_h = strat.uniform_nh(neval or 4 * n_cubes, n_cubes)
+    return edges, n_h, key, n_cubes
+
+
+# --- the block knob model ----------------------------------------------------
+
+def test_valid_blocks_are_divisors_within_budget():
+    blocks = gpu_fill.valid_blocks(768, d=4, ninc=64)
+    assert blocks == sorted(blocks)
+    for b in blocks:
+        assert 768 % b == 0
+        assert gpu_fill.block_footprint_bytes(b, 4, 64) <= gpu_fill.SMEM_BUDGET
+    # every divisor NOT listed busts the budget or the max_block cap
+    rejected = [b for b in range(1, 769)
+                if 768 % b == 0 and b not in blocks]
+    for b in rejected:
+        assert (gpu_fill.block_footprint_bytes(b, 4, 64) > gpu_fill.SMEM_BUDGET
+                or b > 1024)
+
+
+def test_autotune_block_prefers_pow2_and_respects_budget():
+    b = gpu_fill.autotune_block(1024, d=4, ninc=64)
+    assert 1024 % b == 0 and (b & (b - 1)) == 0
+    assert gpu_fill.block_footprint_bytes(b, 4, 64) <= gpu_fill.SMEM_BUDGET
+    # a tiny budget forces a smaller block, never an invalid one
+    small = gpu_fill.autotune_block(1024, d=4, ninc=64, budget=16 << 10)
+    assert small < b and 1024 % small == 0
+
+
+def test_pick_block_divisor_fallback_and_diagnostic():
+    assert gpu_fill._pick_block(256, 384, 2, 32) == 192   # largest divisor
+    assert gpu_fill._pick_block(512, 256, 2, 32) == 256   # clipped to chunk
+    assert gpu_fill._pick_block(None, 512, 2, 32) >= 8    # autotuned
+    with pytest.raises(ValueError, match="divisor"):
+        gpu_fill._pick_block(1, 509, 2, 32)               # 509 prime, block 1
+
+
+# --- RNG contract ------------------------------------------------------------
+
+def test_in_kernel_rng_bit_exact_with_host_stream():
+    """rng_in_kernel=True (the compiled-GPU program, run interpreted) must
+    reproduce the host-uniform path BIT-FOR-BIT — under whichever
+    jax_threefry_partitionable layout conftest selected (CI runs both)."""
+    edges, n_h, key, _ = _setup(dim=3, nstrat=2, ninc=16)
+    kw = dict(nstrat=2, n_cap=270, chunk=90, interpret=True, block=45)
+    host = gpu_fill.fill(edges, n_h, key, _ig, rng_in_kernel=False, **kw)
+    kern = gpu_fill.fill(edges, n_h, key, _ig, rng_in_kernel=True, **kw)
+    also = gpu_fill.fill(edges, n_h, key, _ig, rng_in_kernel=True,
+                         num_warps=4, **kw)    # compiler knob: no effect
+    for field in ("map_sums", "map_counts", "cube_s1", "cube_s2"):
+        np.testing.assert_array_equal(np.asarray(getattr(host, field)),
+                                      np.asarray(getattr(kern, field)),
+                                      err_msg=field)
+        np.testing.assert_array_equal(np.asarray(getattr(kern, field)),
+                                      np.asarray(getattr(also, field)),
+                                      err_msg=f"{field} (num_warps)")
+
+
+# --- oracle parity + composition ---------------------------------------------
+
+def _assert_close(a, b, field, **ctx):
+    a, b = np.asarray(a), np.asarray(b)
+    scale = np.abs(a).max() or 1.0
+    np.testing.assert_allclose(b, a, rtol=1e-4, atol=1e-5 * scale,
+                               err_msg=f"{field} {ctx}")
+
+
+def test_parity_vs_ref_cubes_not_block_multiple():
+    """n_cubes=27 with block=32: window flushes straddle the padded tail of
+    the flat accumulator; the wrapper must trim back to exactly n_cubes."""
+    edges, n_h, key, _ = _setup(dim=3, nstrat=3, ninc=32)
+    kw = dict(nstrat=3, n_cap=512, chunk=256)
+    ref = fill_mod.fill_reference(edges, n_h, key, _ig, **kw)
+    gpu = gpu_fill.fill(edges, n_h, key, _ig, interpret=True, block=32, **kw)
+    for field in ("map_sums", "map_counts", "cube_s1", "cube_s2"):
+        _assert_close(getattr(ref, field), getattr(gpu, field), field)
+
+
+def test_shard_split_kahan_invariance():
+    """C5 contract: two half-range fills (kahan, like the sharded path) sum
+    to the one-shot full-range fill."""
+    edges, n_h, key, _ = _setup(dim=2, nstrat=3, ninc=16)
+    kw = dict(nstrat=3, n_cap=512, chunk=128, interpret=True, block=64,
+              kahan=True)
+    whole = gpu_fill.fill(edges, n_h, key, _ig, **kw)
+    lo = gpu_fill.fill(edges, n_h, key, _ig, start_chunk=0, n_chunks=2, **kw)
+    hi = gpu_fill.fill(edges, n_h, key, _ig, start_chunk=2, n_chunks=2, **kw)
+    both = lo + hi
+    for field in ("map_sums", "map_counts", "cube_s1", "cube_s2"):
+        _assert_close(getattr(whole, field), getattr(both, field), field)
+
+
+def test_vmap_over_closure_params():
+    """CLOSURE_HOISTING + VMAPPABLE: a parameterized integrand vmaps over
+    its captured array and matches per-scenario serial fills."""
+    edges, n_h, key, _ = _setup(dim=2, nstrat=2, ninc=16)
+    kw = dict(nstrat=2, n_cap=256, chunk=128, interpret=True, block=32)
+    amps = jnp.asarray([0.5, 2.0])
+
+    def fill_for(a):
+        return gpu_fill.fill(edges, n_h, key,
+                             lambda x: a * _ig(x), **kw)
+    batched = jax.vmap(fill_for)(amps)
+    for i, a in enumerate(amps):
+        single = fill_for(a)
+        for field in ("map_sums", "cube_s1", "cube_s2"):
+            _assert_close(getattr(single, field),
+                          getattr(batched, field)[i], field, scenario=i)
+
+
+def test_engine_run_and_early_stop():
+    """End-to-end through the registry: a pallas-gpu run completes, and an
+    active StopPolicy (EARLY_STOP capability) traces through the
+    while_loop."""
+    from repro.core import run
+    from repro.engine import StopPolicy, execute
+    ig = igs.make_cosine(dim=2)
+    r = run(ig, VegasConfig(neval=4_000, max_it=3, ninc=16, chunk=2048,
+                            execution=ExecutionConfig(backend="pallas-gpu")),
+            key=jax.random.PRNGKey(0))
+    assert np.isfinite(r.mean) and r.n_it == 3
+    plan = make_plan(ig, VegasConfig(
+        neval=4_000, max_it=5, ninc=16, chunk=2048,
+        execution=ExecutionConfig(backend="pallas-gpu", block=64,
+                                  stop=StopPolicy(rtol=0.5))))
+    res = execute(plan, key=jax.random.PRNGKey(1))
+    assert np.isfinite(res.mean)
+
+
+# --- the PlanError matrix ----------------------------------------------------
+
+FAST = VegasConfig(neval=2_048, max_it=2, ninc=16, chunk=1024)
+IG = igs.make_cosine(dim=2)
+
+
+def test_plan_rejects_f64():
+    with pytest.raises(PlanError, match="float32.*float64"):
+        make_plan(IG, dataclasses.replace(FAST, dtype="float64"),
+                  execution=ExecutionConfig(backend="pallas-gpu"))
+
+
+@pytest.mark.parametrize("mode", ["pathwise", "score"])
+def test_plan_rejects_grad(mode):
+    from repro.engine import GradPolicy
+    with pytest.raises(PlanError, match=f"grad-{mode}"):
+        make_plan(IG, FAST, execution=ExecutionConfig(
+            backend="pallas-gpu", grad=GradPolicy(mode=mode)))
+
+
+def test_plan_rejects_cross_backend_knobs():
+    with pytest.raises(PlanError, match="tile.*not a knob.*pallas-gpu"):
+        make_plan(IG, FAST, execution=ExecutionConfig(backend="pallas-gpu",
+                                                      tile=64))
+    with pytest.raises(PlanError, match="block.*not a knob.*'ref'"):
+        make_plan(IG, FAST, execution=ExecutionConfig(backend="ref",
+                                                      block=64))
+    with pytest.raises(PlanError, match="num_warps.*not a knob"):
+        make_plan(IG, FAST, execution=ExecutionConfig(backend="pallas-fused",
+                                                      num_warps=4))
+
+
+def test_plan_allows_vmap_shard_stop_and_knobs():
+    from repro.batch.family import make_gaussian_family
+    fam = make_gaussian_family(np.array([0.3, 0.7]))
+    plan = make_plan(fam, FAST, execution=ExecutionConfig(
+        backend="pallas-gpu", batch="vmap", block=64, num_warps=4))
+    assert plan.batched and plan.backend.name == "pallas-gpu"
+    from repro.launch.mesh import make_local_mesh
+    plan = make_plan(IG, FAST, execution=ExecutionConfig(
+        backend="pallas-gpu", mesh=make_local_mesh()))
+    assert plan.backend.supports("shardable")
+
+
+# --- platform default / auto resolution --------------------------------------
+
+def test_backend_default_registry_names():
+    assert K.PLATFORM_BACKENDS == {"tpu": "pallas-fused", "gpu": "pallas-gpu"}
+    assert K.backend_default() == K.PLATFORM_BACKENDS.get(
+        jax.default_backend(), "ref")
+
+
+def test_auto_backend_resolves_in_plan():
+    plan = make_plan(IG, FAST, execution=ExecutionConfig(backend="auto"))
+    assert plan.backend.name == K.backend_default()
+    assert plan.execution.backend == plan.backend.name  # recorded, not 'auto'
+    # auto + autotune: the tuner sees the concrete backend
+    plan = make_plan(IG, FAST, execution=ExecutionConfig(backend="auto",
+                                                         autotune=True))
+    assert plan.tuned is not None
+    assert plan.backend.name == K.backend_default()
+
+
+# --- compiled-hardware path --------------------------------------------------
+
+@requires_gpu
+def test_compiled_gpu_matches_ref():
+    """On real GPU silicon only: the compiled Triton kernel (float atomics,
+    parallel grid) must agree with the f32 oracle to accumulation-order
+    tolerance."""
+    edges, n_h, key, _ = _setup(dim=3, nstrat=3, ninc=32)
+    kw = dict(nstrat=3, n_cap=4096, chunk=1024)
+    ref = fill_mod.fill_reference(edges, n_h, key, _ig, **kw)
+    gpu = gpu_fill.fill(edges, n_h, key, _ig, interpret=False, **kw)
+    for field in ("map_sums", "map_counts", "cube_s1", "cube_s2"):
+        a = np.asarray(getattr(ref, field))
+        b = np.asarray(getattr(gpu, field))
+        scale = np.abs(a).max() or 1.0
+        np.testing.assert_allclose(b, a, rtol=5e-4, atol=5e-5 * scale,
+                                   err_msg=field)
