@@ -41,8 +41,13 @@ def _knobs(plan) -> dict:
     if "pallas" in plan.backend.name:
         from repro.kernels import resolve_interpret
         interpret = resolve_interpret(interpret)
+    prec = getattr(plan, "precision", None)
     return dict(backend=plan.backend.name, chunk=int(plan.cfg.chunk),
-                tile=plan.execution.tile, interpret=interpret)
+                tile=plan.execution.tile, interpret=interpret,
+                # §15: gates must never pair runs across precision policies,
+                # so every row names the accumulation dtype it timed.
+                accum_dtype=(prec.accum_dtype if prec is not None
+                             else "float32"))
 
 
 def run(fast=True):

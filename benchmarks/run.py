@@ -64,6 +64,14 @@ def serve_rows(rows: list[dict]) -> list[dict]:
     return [r for r in rows if r["name"].startswith("serve/")]
 
 
+def _accum(r: dict) -> str:
+    """A row's accumulation dtype for gate pairing (§15).  Rows stamped
+    before accum_dtype existed carry none — they were all f32-accumulated,
+    so they normalize to 'float32' and can only ever pair with f32 rows;
+    a widened-f64 run is never compared against an f32 timing."""
+    return r.get("accum_dtype") or "float32"
+
+
 def gate_run(rows: list[dict]) -> list[str]:
     """The autotuner's regression gate (ISSUE 8): pair each
     ``run/autotune/<shape>/autotuned`` row with its ``/default`` twin and
@@ -85,6 +93,9 @@ def gate_run(rows: list[dict]) -> list[str]:
         if r.get("interpret") != twin.get("interpret"):
             # Same universe rule as gate_fill: interpreter vs compiled
             # timings are incomparable.
+            continue
+        if _accum(r) != _accum(twin):
+            # So are f32- vs f64-accumulated runs (§15).
             continue
         pairs += 1
         if r["us_per_call"] > twin["us_per_call"] * 1.05:
@@ -141,7 +152,7 @@ def gate_abs(rows: list[dict], prior_rows: list[dict],
         us = r.get("us_per_call")
         if not us:
             continue
-        k = (r.get("name"), r.get("backend"), r.get("interpret"))
+        k = (r.get("name"), r.get("backend"), r.get("interpret"), _accum(r))
         if r.get("device_kind") is None:
             legacy[k] = min(legacy.get(k, us), us)
         else:
@@ -152,7 +163,7 @@ def gate_abs(rows: list[dict], prior_rows: list[dict],
         if (r.get("device_kind") or "cpu") == "cpu":
             skipped += 1
             continue
-        k = (r.get("name"), r.get("backend"), r.get("interpret"))
+        k = (r.get("name"), r.get("backend"), r.get("interpret"), _accum(r))
         prior = best.get(k + (r.get("device_kind"),), legacy.get(k))
         if prior is None:
             skipped += 1
@@ -183,6 +194,9 @@ def gate_fill(rows: list[dict]) -> list[str]:
         if r.get("interpret") != twin.get("interpret"):
             # Interpreter vs compiled-Mosaic timings are different universes;
             # comparing across modes gates nothing real.
+            continue
+        if _accum(r) != _accum(twin):
+            # Precision policies are different universes too (§15).
             continue
         if r["us_per_call"] > twin["us_per_call"]:
             failures.append(

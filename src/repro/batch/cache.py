@@ -39,11 +39,19 @@ def cache_key(family, rcfg) -> str:
     ``dtype`` is part of the key: edges adapted under f64 accumulation are
     not the same map as the f32 run's (different rounding all the way down
     the adaptation), and before the pin a ``get()`` would silently cast a
-    stored f64 map into an f32 plan (and vice versa).
+    stored f64 map into an f32 plan (and vice versa).  A widened §15
+    PrecisionPolicy changes the adaptation statistics the same way, so a
+    non-default ``accum_dtype`` joins the key (the suffix appears only when
+    widened — pre-§15 cache files keep hitting for default-policy runs).
     """
-    return (f"{family.name}.B{family.batch_size}.d{rcfg.dim}"
-            f".ninc{rcfg.ninc}.ns{rcfg.nstrat}.a{rcfg.alpha}.b{rcfg.beta}"
-            f".dt{jnp.dtype(rcfg.dtype).name}")
+    key = (f"{family.name}.B{family.batch_size}.d{rcfg.dim}"
+           f".ninc{rcfg.ninc}.ns{rcfg.nstrat}.a{rcfg.alpha}.b{rcfg.beta}"
+           f".dt{jnp.dtype(rcfg.dtype).name}")
+    prec = getattr(getattr(rcfg, "execution", None), "precision", None)
+    if prec is not None and prec.accum_dtype is not None \
+            and jnp.dtype(prec.accum_dtype) != jnp.dtype(rcfg.dtype):
+        key += f".acc{jnp.dtype(prec.accum_dtype).name}"
+    return key
 
 
 class MapCache:

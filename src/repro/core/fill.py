@@ -58,9 +58,10 @@ def _eval_chunk(edges, cube, u, integrand, nstrat, n_cubes):
 
 
 def fill_reference(edges, n_h, key, integrand, *, nstrat: int, n_cap: int,
-                   chunk: int, dtype=jnp.float32, start_chunk=0,
-                   n_chunks: int | None = None,
-                   kahan: bool = False) -> FillResult:
+                   chunk: int, dtype=jnp.float32, accum_dtype=None,
+                   start_chunk=0, n_chunks: int | None = None,
+                   kahan: bool = False,
+                   return_comp: bool = False) -> FillResult:
     """Pure-jnp fill, scanned in chunks of the *global* eval axis.
 
     ``start_chunk``/``n_chunks`` select a contiguous chunk range — the unit of
@@ -75,7 +76,24 @@ def fill_reference(edges, n_h, key, integrand, *, nstrat: int, n_cap: int,
     and one split over 8 agree far inside the 2e-5 invariance tolerance —
     without it, plain-f32 reduction-order drift is amplified by the adaptation
     feedback across iterations (DESIGN.md §5).
+
+    ``accum_dtype`` (default: ``dtype``) is the §15 accumulation dtype:
+    samples and integrand products stay in ``dtype``, but each chunk's
+    contributions are widened BEFORE the scatter-adds, so both the
+    within-chunk and the cross-chunk accumulation run at the wider
+    precision — the reference semantics the kernel backends approximate.
+
+    ``return_comp=True`` (requires ``kahan=True``) returns the
+    ``(sums, compensation)`` FillResult pair instead of the sums alone: the
+    shard boundary needs BOTH so the psum can carry the compensation across
+    devices (``engine.sharding.make_local_fill``) instead of silently
+    degrading to naive summation there.
     """
+    if return_comp and not kahan:
+        raise ValueError("return_comp=True requires kahan=True (there is "
+                         "no compensation term to return)")
+    accum = jnp.dtype(accum_dtype) if accum_dtype is not None \
+        else jnp.dtype(dtype)
     dim = edges.shape[0]
     ninc = edges.shape[1] - 1
     n_cubes = n_h.shape[0]
@@ -90,12 +108,13 @@ def fill_reference(edges, n_h, key, integrand, *, nstrat: int, n_cap: int,
         u = jax.random.uniform(k, (chunk, dim), dtype=dtype)
         cube = strat.cubes_for_slice(n_h, gchunk * chunk, chunk)
         w, iy, valid = _eval_chunk(edges, cube, u, integrand, nstrat, n_cubes)
+        w = w.astype(accum)
         w2 = w * w
-        cnt = valid.astype(dtype)
+        cnt = valid.astype(accum)
         ms, mc = vmap_.accumulate_map_weights(iy, w2, cnt, ninc)
         # Overflow bucket (id n_cubes) catches masked evals; dropped below.
-        s1 = jnp.zeros((n_cubes + 1,), dtype).at[cube].add(w)
-        s2 = jnp.zeros((n_cubes + 1,), dtype).at[cube].add(w2)
+        s1 = jnp.zeros((n_cubes + 1,), accum).at[cube].add(w)
+        s2 = jnp.zeros((n_cubes + 1,), accum).at[cube].add(w2)
         contrib = FillResult(ms, mc, s1[:n_cubes], s2[:n_cubes])
         if not kahan:
             return acc + contrib, None
@@ -104,18 +123,21 @@ def fill_reference(edges, n_h, key, integrand, *, nstrat: int, n_cap: int,
         comp = jax.tree.map(lambda tt, a, yy: (tt - a) - yy, t, acc, y)
         return (t, comp), None
 
-    zero = FillResult(jnp.zeros((dim, ninc), dtype), jnp.zeros((dim, ninc), dtype),
-                      jnp.zeros((n_cubes,), dtype), jnp.zeros((n_cubes,), dtype))
+    zero = FillResult(jnp.zeros((dim, ninc), accum), jnp.zeros((dim, ninc), accum),
+                      jnp.zeros((n_cubes,), accum), jnp.zeros((n_cubes,), accum))
     init = (zero, zero) if kahan else zero
     out, _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
-    return out[0] if kahan else out
+    if kahan:
+        return out if return_comp else out[0]
+    return out
 
 
 def fill_pallas(edges, n_h, key, integrand, *, nstrat: int, n_cap: int,
-                chunk: int, dtype=jnp.float32, interpret: bool | None = None,
+                chunk: int, dtype=jnp.float32, accum_dtype=None,
+                interpret: bool | None = None,
                 fused_cubes: bool = True, tile: int | None = None,
                 start_chunk=0, n_chunks: int | None = None,
-                kahan: bool = False,
+                kahan: bool = False, return_comp: bool = False,
                 rng_in_kernel: bool | None = None) -> FillResult:
     """Pallas-kernel fill, scan-chunked like :func:`fill_reference` (same
     ``start_chunk``/``n_chunks`` distribution unit, same chunk-keyed RNG with
@@ -125,17 +147,19 @@ def fill_pallas(edges, n_h, key, integrand, *, nstrat: int, n_cap: int,
     interpreter elsewhere); ``tile=None`` autotunes against the VMEM budget."""
     from repro.kernels import ops as kops
     return kops.fill(edges, n_h, key, integrand, nstrat=nstrat, n_cap=n_cap,
-                     chunk=chunk, dtype=dtype, interpret=interpret,
+                     chunk=chunk, dtype=dtype, accum_dtype=accum_dtype,
+                     interpret=interpret,
                      fused_cubes=fused_cubes, tile=tile,
                      start_chunk=start_chunk, n_chunks=n_chunks, kahan=kahan,
-                     rng_in_kernel=rng_in_kernel)
+                     return_comp=return_comp, rng_in_kernel=rng_in_kernel)
 
 
 def fill_pallas_gpu(edges, n_h, key, integrand, *, nstrat: int, n_cap: int,
-                    chunk: int, dtype=jnp.float32,
+                    chunk: int, dtype=jnp.float32, accum_dtype=None,
                     interpret: bool | None = None, block: int | None = None,
                     num_warps: int | None = None, start_chunk=0,
                     n_chunks: int | None = None, kahan: bool = False,
+                    return_comp: bool = False,
                     rng_in_kernel: bool | None = None) -> FillResult:
     """Triton-lowered fill (the ``pallas-gpu`` registry backend): grid over
     sample blocks, block-privatized histograms flushed with atomic adds,
@@ -147,9 +171,11 @@ def fill_pallas_gpu(edges, n_h, key, integrand, *, nstrat: int, n_cap: int,
     from repro.kernels import gpu_fill
     return gpu_fill.fill(edges, n_h, key, integrand, nstrat=nstrat,
                          n_cap=n_cap, chunk=chunk, dtype=dtype,
+                         accum_dtype=accum_dtype,
                          interpret=interpret, block=block,
                          num_warps=num_warps, start_chunk=start_chunk,
                          n_chunks=n_chunks, kahan=kahan,
+                         return_comp=return_comp,
                          rng_in_kernel=rng_in_kernel)
 
 

@@ -199,8 +199,12 @@ def iteration_step(state: VegasState, integrand: Integrand,
     # Adaptive stratification (the "+" of VEGAS+); beta=0 freezes n_h uniform.
     n_h = (strat.adapt_nh(d_h, cfg.beta, cfg.neval)
            if cfg.beta > 0 else state.n_h)
-    # Importance-map adaptation; alpha=0 freezes the map.
-    edges = (vmap_.adapt_edges(state.edges, res.map_sums, res.map_counts, cfg.alpha)
+    # Importance-map adaptation; alpha=0 freezes the map.  Widened (§15)
+    # moments would promote the adapted edges to the accum dtype — cast back
+    # so the loop-carried state (and next iteration's samples) stay in the
+    # sample dtype.
+    edges = (vmap_.adapt_edges(state.edges, res.map_sums, res.map_counts,
+                               cfg.alpha).astype(dtype)
              if cfg.alpha > 0 else state.edges)
     return VegasState(edges, n_h, state.key, state.it + 1, results)
 

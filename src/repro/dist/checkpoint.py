@@ -49,17 +49,39 @@ def save(path: str, tree, step: int = 0, meta: dict | None = None) -> str:
 def restore(path: str, like):
     """Read a checkpoint back into the structure of the ``like`` pytree.
 
-    Returns ``(tree, step, meta)``.  Leaf count must match ``like``; dtypes
-    and shapes come from the file (so a resumed run may later grow e.g. the
-    results buffer itself — see ``integrator.run``).
+    Returns ``(tree, step, meta)``.  Leaf count must match ``like``; shapes
+    come from the file (so a resumed run may later grow e.g. the results
+    buffer itself — see ``integrator.run``), but dtypes come from the
+    TEMPLATE: a run saved under one ``JAX_ENABLE_X64`` setting must resume
+    cleanly under the other, so each float leaf is cast to the template
+    leaf's dtype rather than trusting the file's.  (Without the cast, an
+    x64-saved f64 edges leaf resumed in an f32 process poisons the whole
+    loop carry — every subsequent jitted iteration recompiles or fails on
+    the dtype mismatch.)  A leaf whose dtype KIND differs (float saved where
+    the template holds int, ...) is structural corruption, not a precision
+    flip, and raises ``ValueError`` naming the leaf.
     """
-    treedef = jax.tree.structure(like)
+    like_leaves, treedef = jax.tree_util.tree_flatten(like)
+    paths = [jax.tree_util.keystr(p) for p, _ in
+             jax.tree_util.tree_flatten_with_path(like)[0]]
     n_leaves = treedef.num_leaves
     with np.load(path) as z:
         step = int(z["__step__"])
         raw = bytes(z["__meta__"].tobytes())
         meta = json.loads(raw.decode("utf-8")) if raw else {}
-        leaves = [jnp.asarray(z[f"leaf_{i}"]) for i in range(n_leaves)]
+        leaves = []
+        for i, tmpl in enumerate(like_leaves):
+            arr = z[f"leaf_{i}"]
+            want = jnp.asarray(tmpl).dtype
+            if arr.dtype != want:
+                if np.dtype(arr.dtype).kind != np.dtype(want).kind:
+                    raise ValueError(
+                        f"checkpoint {path!r} leaf {i} ({paths[i] or '<root>'}"
+                        f") holds dtype {arr.dtype} where the template has "
+                        f"{want} — different kinds, refusing to cast "
+                        f"(wrong/corrupt checkpoint for this state?)")
+                arr = arr.astype(want)
+            leaves.append(jnp.asarray(arr))
     return jax.tree.unflatten(treedef, leaves), step, meta
 
 

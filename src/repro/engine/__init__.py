@@ -37,6 +37,7 @@ from .config import (  # noqa: F401
     CheckpointPolicy,
     ExecutionConfig,
     GradPolicy,
+    PrecisionPolicy,
     StopPolicy,
 )
 
@@ -55,7 +56,8 @@ _LAZY = {
 __all__ = [
     "BATCH_MODES", "BackendSpec", "CAPABILITIES", "CheckpointPolicy",
     "CostTable", "ExecutionConfig", "GRAD_MODES", "GradPolicy", "Plan",
-    "PlanError", "StopPolicy", "TuneReport", "available", "bind_fill",
+    "PlanError", "PrecisionPolicy", "StopPolicy", "TuneReport", "available",
+    "bind_fill",
     "calibrate", "capability_matrix", "execute", "get_backend", "make_plan",
     "make_sharded_fill", "make_stop_sync", "register", "resolve_table",
 ]

@@ -520,20 +520,33 @@ def _is_family(workload) -> bool:
     return hasattr(workload, "params") and hasattr(workload, "bind")
 
 
+def _accum_itemsize(execution) -> int:
+    """Accumulator byte width the budget oracles must price (§15): 8 under a
+    widened f64 PrecisionPolicy, else 4."""
+    prec = getattr(execution, "precision", None)
+    if prec is not None and prec.accum_dtype is not None:
+        return int(np.dtype(prec.accum_dtype).itemsize)
+    return 4
+
+
 def _step_candidates(step_knob: str, chunk: int, d: int, ninc: int,
-                     n_cubes: int) -> list:
+                     n_cubes: int, accum_itemsize: int = 4) -> list:
     """A small predicted-orderable subset of the kernel's valid grid steps
     (``tile`` on the Mosaic kernels, ``block`` on the Triton one): the
     static-autotune choice plus the power-of-two divisors >= 8.  All
     candidates come from the kernel's own validity oracle
     (``ops.valid_tiles`` / ``gpu_fill.valid_blocks``), so the tuner can
-    never pick a step ``_pick_tile``/``_pick_block`` rejects."""
+    never pick a step ``_pick_tile``/``_pick_block`` rejects — including
+    under a widened policy, where the 8-byte accumulators shrink the valid
+    set (``accum_itemsize``)."""
     if step_knob == "block":
         from repro.kernels import gpu_fill
-        valid = gpu_fill.valid_blocks(chunk, d, ninc)
+        valid = gpu_fill.valid_blocks(chunk, d, ninc,
+                                      accum_itemsize=accum_itemsize)
     else:
         from repro.kernels import ops
-        valid = ops.valid_tiles(chunk, d, ninc, n_cubes)
+        valid = ops.valid_tiles(chunk, d, ninc, n_cubes,
+                                accum_itemsize=accum_itemsize)
     if not valid:
         return [None]     # let the kernel's own picker raise its diagnostic
     pow2 = [t for t in valid if t >= 8 and (t & (t - 1)) == 0]
@@ -574,6 +587,7 @@ def tune(workload, cfg, *, table: CostTable | None = None):
     probe_exec = dataclasses.replace(execution, autotune=False)
     step_knob = next((k for k in ("tile", "block") if k in spec.knobs), None)
     pinned_step = getattr(execution, step_knob) if step_knob else None
+    itemsize = _accum_itemsize(execution)
 
     # The default-knob baseline the report compares against.
     base_rcfg = cfg.resolve(dim)
@@ -581,11 +595,13 @@ def tune(workload, cfg, *, table: CostTable | None = None):
     if step_knob == "tile" and default_step is None:
         from repro.kernels import ops
         default_step = ops.autotune_tile(base_rcfg.chunk, dim,
-                                         base_rcfg.ninc, base_rcfg.n_cubes)
+                                         base_rcfg.ninc, base_rcfg.n_cubes,
+                                         accum_itemsize=itemsize)
     elif step_knob == "block" and default_step is None:
         from repro.kernels import gpu_fill
         default_step = gpu_fill.autotune_block(base_rcfg.chunk, dim,
-                                               base_rcfg.ninc)
+                                               base_rcfg.ninc,
+                                               accum_itemsize=itemsize)
     mesh = execution.mesh
     default_axes = (execution.shard_axes if execution.shard_axes is not None
                     else (tuple(mesh.axis_names) if mesh is not None else None))
@@ -631,7 +647,7 @@ def tune(workload, cfg, *, table: CostTable | None = None):
         steps = ([pinned_step] if step_knob is None
                  or pinned_step is not None
                  else _step_candidates(step_knob, rcfg.chunk, dim,
-                                       rcfg.ninc, rcfg.n_cubes))
+                                       rcfg.ninc, rcfg.n_cubes, itemsize))
         for step in steps:
             for axes in axes_cands:
                 n_sh = (sharding_mod.mesh_shard_count(mesh, axes)

@@ -67,7 +67,12 @@ class BackendSpec:
     capabilities: frozenset
     knobs: tuple[str, ...] = ()       # ExecutionConfig fields forwarded as kwargs
     fixed: Mapping[str, Any] = dataclasses.field(default_factory=dict)
-    dtypes: tuple[str, ...] = ("float32",)
+    #: Declared (sample_dtype, accum_dtype) capability pairs (DESIGN.md §15):
+    #: which PrecisionPolicy combinations this fill implements.  Samples on
+    #: the kernel backends are pinned to f32 by the in-kernel RNG contract
+    #: (the threefry mantissa trick reproduces the f32 uniform bit pattern);
+    #: widened f32->f64 accumulation is a separate, declarable capability.
+    precisions: tuple[tuple[str, str], ...] = (("float32", "float32"),)
     family: str = "tpu"               # platform that compiles this kernel
                                       # natively (kernels.resolve_interpret);
                                       # irrelevant without an 'interpret' knob
@@ -75,6 +80,12 @@ class BackendSpec:
 
     def supports(self, capability: str) -> bool:
         return capability in self.capabilities
+
+    @property
+    def dtypes(self) -> tuple[str, ...]:
+        """Accepted SAMPLE dtypes, derived from the precision pairs (the
+        pre-§15 single-axis declaration, kept for messages and callers)."""
+        return tuple(dict.fromkeys(s for s, _ in self.precisions))
 
 
 _REGISTRY: dict[str, BackendSpec] = {}
@@ -119,6 +130,12 @@ def bind_fill(rcfg, *, backend: str | None = None, **overrides) -> Callable:
     spec = get(backend if backend is not None else rcfg.execution.backend)
     kw = dict(nstrat=rcfg.nstrat, n_cap=rcfg.n_cap, chunk=rcfg.chunk,
               dtype=jnp.dtype(rcfg.dtype))
+    prec = getattr(rcfg.execution, "precision", None)
+    if prec is not None and prec.accum_dtype is not None:
+        # The §15 accumulation dtype rides the same binding point as the
+        # sample dtype, so every fill call site (executor, sharding, serve,
+        # autotune probes) inherits the policy without new threading.
+        kw["accum_dtype"] = jnp.dtype(prec.accum_dtype)
     kw.update(spec.fixed)
     for knob in spec.knobs:
         kw[knob] = getattr(rcfg.execution, knob)
@@ -146,7 +163,8 @@ register(BackendSpec(
     capabilities=frozenset({SHARDABLE, VMAPPABLE, CLOSURE_HOISTING,
                             EARLY_STOP, GRAD_PATHWISE, GRAD_SCORE}),
     knobs=(),
-    dtypes=("float32", "float64"),
+    precisions=(("float32", "float32"), ("float32", "float64"),
+                ("float64", "float64"), ("float64", "float32")),
     doc="pure-jnp oracle: scatter-add accumulation, chunked lax.scan",
 ))
 
@@ -157,7 +175,7 @@ register(BackendSpec(
                             EARLY_STOP, GRAD_PATHWISE}),
     knobs=("interpret", "tile"),
     fixed={"fused_cubes": False},
-    dtypes=("float32",),
+    precisions=(("float32", "float32"), ("float32", "float64")),
     doc="P-V2 baseline kernel: uniforms in / weights out, XLA segment-sum",
 ))
 
@@ -168,7 +186,7 @@ register(BackendSpec(
                             CLOSURE_HOISTING, EARLY_STOP}),
     knobs=("interpret", "tile"),
     fixed={"fused_cubes": True},
-    dtypes=("float32",),
+    precisions=(("float32", "float32"), ("float32", "float64")),
     doc="P-V3 streaming kernel: in-kernel RNG + in-kernel cube moments",
 ))
 
@@ -178,7 +196,7 @@ register(BackendSpec(
     capabilities=frozenset({SHARDABLE, VMAPPABLE, IN_KERNEL_RNG,
                             CLOSURE_HOISTING, EARLY_STOP}),
     knobs=("interpret", "block", "num_warps"),
-    dtypes=("float32",),
+    precisions=(("float32", "float32"), ("float32", "float64")),
     family="gpu",
     doc="Triton-lowered fill: scatter/atomic cube accumulation, "
         "block-privatized histograms, in-kernel RNG (DESIGN.md §14)",

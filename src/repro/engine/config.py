@@ -52,6 +52,46 @@ GRAD_MODES = ("pathwise", "score", "off")
 
 
 @dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Per-plan numeric precision policy (DESIGN.md §15).
+
+    ``sample_dtype`` is the dtype samples, transforms, and integrand products
+    are computed in; ``accum_dtype`` is the dtype the fill's moment
+    accumulators (map histogram, per-cube s1/s2) carry.  Either may be None:
+    ``sample_dtype=None`` inherits the algorithm config's own ``dtype`` and
+    ``accum_dtype=None`` matches the sample dtype (the classic single-dtype
+    run).  The interesting split is ``f32 -> f64``: products stay f32 — on
+    the fused TPU kernel they must, the MXU contracts f32 and the in-kernel
+    RNG reproduces the f32 uniform bit pattern — but every running sum is
+    widened to f64 before accumulation, cuVegas' own double-precision
+    accumulator design.
+
+    ``make_plan`` validates the resolved ``(sample, accum)`` pair against
+    the backend registry's declared capability pairs
+    (`BackendSpec.precisions`) and rejects unsupported combinations with a
+    one-line PlanError — e.g. ``f64`` samples on a fused backend (the RNG
+    contract is f32-only) or a widened accumulator without x64 enabled.
+    """
+    sample_dtype: str | None = None   # None = inherit VegasConfig.dtype
+    accum_dtype: str | None = None    # None = same as sample_dtype
+
+    @property
+    def widened(self) -> bool:
+        """True when accumulation runs wider than sampling (the policy does
+        something beyond the classic single-dtype run)."""
+        if self.accum_dtype is None:
+            return False
+        import numpy as np
+        return (np.dtype(self.accum_dtype).itemsize
+                > np.dtype(self.sample_dtype or "float32").itemsize)
+
+    def describe(self) -> str:
+        s = self.sample_dtype or "cfg"
+        a = self.accum_dtype or s
+        return f"{s}->{a}"
+
+
+@dataclasses.dataclass(frozen=True)
 class GradPolicy:
     """Differentiable-integration policy (DESIGN.md §11, `repro.grad`).
 
@@ -190,6 +230,10 @@ class ExecutionConfig:
     checkpoint: CheckpointPolicy | None = None
     stop: StopPolicy | None = None  # convergence target -> while_loop (§10)
     grad: GradPolicy | None = None  # differentiable two-phase run (§11)
+    precision: PrecisionPolicy | None = None  # sample/accum dtype pair (§15):
+                                    # None = single-dtype run in cfg.dtype;
+                                    # PrecisionPolicy(accum_dtype='float64')
+                                    # widens the moment accumulators
     autotune: bool = False          # measured-cost-model knob choice (§13):
                                     # make_plan picks chunk/tile/batch/shard
                                     # via engine.autotune.tune
@@ -244,6 +288,8 @@ class ExecutionConfig:
             bits.append(f"stop[{self.stop.describe()}]")
         if self.grad is not None and self.grad.active:
             bits.append(f"grad[{self.grad.describe()}]")
+        if self.precision is not None:
+            bits.append(f"precision[{self.precision.describe()}]")
         if self.autotune:
             bits.append("autotune")
         return " ".join(bits)

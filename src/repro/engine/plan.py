@@ -21,8 +21,9 @@ from repro.core import integrator as core
 
 from . import backends as backends_mod
 from . import sharding as sharding_mod
+from . import config as config_mod
 from .config import (BATCH_MODES, GRAD_MODES, CheckpointPolicy,
-                     ExecutionConfig, GradPolicy, StopPolicy)
+                     ExecutionConfig, GradPolicy, PrecisionPolicy, StopPolicy)
 
 
 class PlanError(ValueError):
@@ -47,6 +48,8 @@ class Plan:
     grad: GradPolicy | None = None      # None, or an ACTIVE policy (§11)
     tuned: Any = None                   # TuneReport when the knobs came from
                                         # the measured cost model (§13)
+    precision: PrecisionPolicy | None = None  # RESOLVED (sample, accum)
+                                        # pair, both names concrete (§15)
 
     def describe(self) -> str:
         w = self.workload
@@ -61,6 +64,12 @@ class Plan:
             f"  loop       {'host (checkpointing)' if self.checkpoint else ('on-device while_loop [stop: ' + self.stop.describe() + ']' if self.stop else 'on-device fori_loop')}",
             f"  grad       {self.grad.describe() + ' (two-phase: stop_gradient adapt -> frozen-map eval, §11)' if self.grad else 'off'}",
         ]
+        if self.precision is not None:
+            p = self.precision
+            note = ("" if p.accum_dtype == p.sample_dtype else
+                    " (products stay in the sample dtype; running sums "
+                    "widened, §15)")
+            lines.append(f"  precision  {p.describe()}{note}")
         if self.tuned is not None:
             lines.append(f"  knobs      {self.tuned.describe()}")
         return "\n".join(lines)
@@ -111,6 +120,35 @@ def make_plan(workload, cfg: core.VegasConfig | None = None,
             f"dtype={dtype_name!r}"
             + (" (the in-kernel RNG reproduces the f32 uniform bit pattern)"
                if spec.supports(backends_mod.IN_KERNEL_RNG) else ""))
+
+    # --- precision axis (§15) ----------------------------------------------
+    prec = execution.precision
+    if prec is not None and prec.sample_dtype is not None:
+        sample_name = jnp.dtype(prec.sample_dtype).name
+        if sample_name != dtype_name:
+            raise PlanError(
+                f"PrecisionPolicy(sample_dtype={sample_name!r}) conflicts "
+                f"with cfg.dtype={dtype_name!r} — the sample dtype has one "
+                f"source of truth; leave sample_dtype=None to inherit it")
+    accum_name = (jnp.dtype(prec.accum_dtype).name
+                  if prec is not None and prec.accum_dtype is not None
+                  else dtype_name)
+    if (dtype_name, accum_name) not in spec.precisions:
+        pairs = ", ".join(f"{s}->{a}" for s, a in spec.precisions)
+        raise PlanError(
+            f"backend {spec.name!r} supports precision pairs [{pairs}], got "
+            f"{dtype_name}->{accum_name}")
+    import jax.dtypes as _jdtypes
+    if accum_name != dtype_name and \
+            _jdtypes.canonicalize_dtype(accum_name).name != accum_name:
+        # jnp silently narrows f64 arrays when x64 is off — a widened
+        # accumulator would silently degrade to the plain-f32 run.
+        raise PlanError(
+            f"accum_dtype={accum_name!r} needs x64 enabled: set "
+            f"JAX_ENABLE_X64=1 / call repro.launch.env.enable_x64(True) "
+            f"before building programs")
+    precision = config_mod.PrecisionPolicy(sample_dtype=dtype_name,
+                                           accum_dtype=accum_name)
     # The knob universe comes from the registry itself, so a knob added to
     # one BackendSpec is automatically validated against every other.
     all_knobs = set().union(*(backends_mod.get(n).knobs
@@ -248,12 +286,17 @@ def make_plan(workload, cfg: core.VegasConfig | None = None,
                 "grad + mesh is not supported yet: the differentiable eval "
                 "pass is not wired through shard_map — drop the mesh (the "
                 "adapt phase alone does not dominate grad runs)")
+        if accum_name != dtype_name:
+            raise PlanError(
+                "grad + widened accumulation is not supported yet: the "
+                "two-phase custom VJP/JVP primal types are the sample "
+                "dtype — drop the PrecisionPolicy or the GradPolicy")
 
     return Plan(workload=workload, cfg=rcfg, execution=execution,
                 backend=spec, is_family=is_family, batched=batched,
                 batch_size=batch_size, mesh=mesh, shard_axes=shard_axes,
                 n_shards=n_shards, checkpoint=ckpt, stop=stop, grad=grad,
-                tuned=tuned)
+                tuned=tuned, precision=precision)
 
 
 def _caps(capability: str) -> list[str]:

@@ -69,18 +69,30 @@ def make_local_fill(rcfg, mesh, axis_names, *, backend: str | None = None):
     with the registered backend (Kahan-compensated so partials are exact to
     ~1 ulp, DESIGN.md D4) and psum-reduces over ``axis_names`` — every
     device returns the identical replicated :class:`FillResult`.
+
+    The compensation survives the shard boundary: each shard returns its
+    ``(sums, comp)`` pair (``return_comp=True``) and BOTH are psum-reduced,
+    so the combined result is ``psum(sums) - psum(comp)`` — the corrected
+    total.  Psumming the raw sums alone would throw the per-shard
+    compensations away at exactly the reduction step the Kahan carry exists
+    to protect, re-introducing device-count-dependent drift at hostile
+    scales (DESIGN.md §15).
     """
     axis_names = tuple(axis_names)
     n_shards = mesh_shard_count(mesh, axis_names)
     total_chunks = rcfg.n_cap // rcfg.chunk
     _, per_shard = shard_chunk_range(total_chunks, 0, n_shards)
-    shard_fill = backends_mod.bind_fill(rcfg, backend=backend, kahan=True)
+    shard_fill = backends_mod.bind_fill(rcfg, backend=backend, kahan=True,
+                                        return_comp=True)
 
     def fill(edges, n_h, key, integrand):
         idx = linear_shard_index(mesh, axis_names)
-        part = shard_fill(edges, n_h, key, integrand,
-                          start_chunk=idx * per_shard, n_chunks=per_shard)
-        return jax.tree.map(lambda x: jax.lax.psum(x, axis_names), part)
+        part, comp = shard_fill(edges, n_h, key, integrand,
+                                start_chunk=idx * per_shard,
+                                n_chunks=per_shard)
+        total = jax.tree.map(lambda x: jax.lax.psum(x, axis_names), part)
+        resid = jax.tree.map(lambda x: jax.lax.psum(x, axis_names), comp)
+        return jax.tree.map(jnp.subtract, total, resid)
 
     return fill
 

@@ -74,40 +74,53 @@ _TINY = 1e-30
 SMEM_BUDGET = 192 << 10
 
 
-def block_footprint_bytes(block: int, d: int, ninc: int) -> int:
-    """Per-program scratch under the DESIGN.md §14 budget math (f32): the
-    (block, ninc) masked one-hot behind the private map histogram, the
-    (block, block) cube-window one-hot, and ~8 (block, d) transform
-    temporaries.  No grid-resident term: unlike the TPU kernel's VMEM
-    accumulators, the full-size accumulators live in HBM behind atomics."""
-    return 4 * (block * ninc + block * block + 8 * block * d)
+def block_footprint_bytes(block: int, d: int, ninc: int, *,
+                          accum_itemsize: int = 4) -> int:
+    """Per-program scratch under the DESIGN.md §14/§15 budget math: the
+    (block, ninc) masked partial behind the private map histogram and the
+    (block, block) cube-window partial materialize at ``accum_itemsize``
+    bytes (8 under a widened f64 policy — the where-products are widened
+    BEFORE the masked sums so the privatized partials genuinely carry the
+    accumulation dtype), plus ~8 f32 (block, d) transform temporaries.
+    No grid-resident term: unlike the TPU kernel's VMEM accumulators, the
+    full-size accumulators live in HBM behind atomics."""
+    return (accum_itemsize * (block * ninc + block * block)
+            + 4 * 8 * block * d)
 
 
 def valid_blocks(chunk: int, d: int, ninc: int, *,
                  budget: int = SMEM_BUDGET,
-                 max_block: int = 1024) -> list[int]:
+                 max_block: int = 1024, accum_itemsize: int = 4) -> list[int]:
     """Every block size the kernel accepts for this shape, ascending:
     divisors of ``chunk`` whose :func:`block_footprint_bytes` fits the
     budget.  The single validity oracle shared by :func:`autotune_block` and
     the plan autotuner (`engine.autotune`) — mirroring ``ops.valid_tiles``
-    so the tuner can never choose a block the kernel would reject."""
+    so the tuner can never choose a block the kernel would reject.
+    ``accum_itemsize`` prices the privatized partials (8 under an f64
+    PrecisionPolicy, §15)."""
     return [b for b in range(1, min(chunk, max_block) + 1)
             if chunk % b == 0
-            and block_footprint_bytes(b, d, ninc) <= budget]
+            and block_footprint_bytes(b, d, ninc,
+                                      accum_itemsize=accum_itemsize)
+            <= budget]
 
 
 def autotune_block(chunk: int, d: int, ninc: int, *,
-                   budget: int = SMEM_BUDGET, max_block: int = 1024) -> int:
+                   budget: int = SMEM_BUDGET, max_block: int = 1024,
+                   accum_itemsize: int = 4) -> int:
     """Largest power-of-two valid block (Triton tiles powers of two well;
     any valid divisor is accepted when no power of two fits)."""
-    blocks = valid_blocks(chunk, d, ninc, budget=budget, max_block=max_block)
+    blocks = valid_blocks(chunk, d, ninc, budget=budget, max_block=max_block,
+                          accum_itemsize=accum_itemsize)
     pow2 = [b for b in blocks if (b & (b - 1)) == 0]
     return (pow2 or blocks or [1])[-1]
 
 
-def _pick_block(block: int | None, chunk: int, d: int, ninc: int) -> int:
+def _pick_block(block: int | None, chunk: int, d: int, ninc: int,
+                accum_itemsize: int = 4) -> int:
     if block is None:
-        block = autotune_block(chunk, d, ninc)
+        block = autotune_block(chunk, d, ninc,
+                               accum_itemsize=accum_itemsize)
     else:
         block = min(block, chunk)
         if chunk % block != 0:
@@ -123,7 +136,8 @@ def _pick_block(block: int | None, chunk: int, d: int, ninc: int) -> int:
 
 
 def _fill_gpu_kernel(*refs, nstrat: int, n_cubes: int, ninc: int, chunk: int,
-                     block: int, d: int, integrand, rng_in_kernel: bool):
+                     block: int, d: int, integrand, rng_in_kernel: bool,
+                     accum_dtype=jnp.float32):
     rng_or_u_ref, cube_ref, ew_ref, *rest = refs
     const_refs = rest[:-4]
     ms_ref, mc_ref, s1_ref, s2_ref = rest[-4:]
@@ -167,8 +181,14 @@ def _fill_gpu_kernel(*refs, nstrat: int, n_cubes: int, ninc: int, chunk: int,
     fx = integrand(x, *[r[...] for r in const_refs])
     fx = fx.reshape(block).astype(dtype)
     w = jnp.where(valid, jac * fx, jnp.zeros((), dtype))      # (block,)
+    # §15 widening boundary: transform + integrand products are f32; the
+    # per-eval contributions widen HERE, before the privatized masked-sum
+    # partials, so both the in-block reductions and the HBM atomic
+    # accumulators run at accum_dtype (which the budget model prices).
+    accum = jnp.dtype(accum_dtype)
+    w = w.astype(accum)
     w2 = w * w
-    cnt = valid.astype(dtype)
+    cnt = valid.astype(accum)
 
     # ---- map histogram: block-private partials, one atomic per bucket ----
     lanes = jax.lax.broadcasted_iota(jnp.int32, (block, ninc), 1)
@@ -200,7 +220,7 @@ def _fill_gpu_kernel(*refs, nstrat: int, n_cubes: int, ninc: int, chunk: int,
 def vegas_fill_gpu(key_bits, cube, edges_lo, widths, *, nstrat: int,
                    n_cubes: int, integrand, block: int = 128,
                    interpret: bool = True, num_warps: int | None = None,
-                   u=None, ig_consts=()):
+                   u=None, ig_consts=(), accum_dtype=None):
     """pallas_call wrapper for the Triton-shaped fill kernel (one chunk).
 
     Args:
@@ -217,6 +237,11 @@ def vegas_fill_gpu(key_bits, cube, edges_lo, widths, *, nstrat: int,
                 is the interpret-mode escape hatch (same XLA:CPU threefry
                 vectorization issue as the TPU path, DESIGN.md §7) —
                 bit-identical either way.
+      accum_dtype: accumulator dtype (default f32).  Under the §15 widened
+                policy the four flat HBM accumulators are f64: per-eval
+                products stay f32, each program widens its contributions
+                before the privatized masked sums, and the atomic adds land
+                on 8-byte slots.
 
     Returns flat ``(ms, mc, s1_pad, s2_pad)``: map moments as (d*ninc,) and
     cube moments as (n_cubes + block,) — reshape/trim in the caller.  All
@@ -229,6 +254,7 @@ def vegas_fill_gpu(key_bits, cube, edges_lo, widths, *, nstrat: int,
     assert chunk % block == 0, (chunk, block)
     assert edges_lo.dtype == jnp.float32, \
         "pallas-gpu is f32-only (RNG contract)"
+    accum = jnp.dtype(accum_dtype) if accum_dtype is not None else jnp.float32
     n_pad = n_cubes + block
     rng_in_kernel = u is None
     # Interleaved flat tables: row 0 = edges, row 1 = widths, each (d*ninc,)
@@ -239,7 +265,7 @@ def vegas_fill_gpu(key_bits, cube, edges_lo, widths, *, nstrat: int,
     kernel = functools.partial(
         _fill_gpu_kernel, nstrat=nstrat, n_cubes=n_cubes, ninc=ninc,
         chunk=chunk, block=block, d=d, integrand=kig,
-        rng_in_kernel=rng_in_kernel)
+        rng_in_kernel=rng_in_kernel, accum_dtype=accum)
     grid = (chunk // block,)
     first_in = (key_bits, pl.BlockSpec((1, 2), lambda i: (0, 0))) \
         if rng_in_kernel else (u, pl.BlockSpec((block, d), lambda i: (i, 0)))
@@ -247,10 +273,10 @@ def vegas_fill_gpu(key_bits, cube, edges_lo, widths, *, nstrat: int,
     def full(*shape):
         return pl.BlockSpec(shape, lambda i, _n=len(shape): (0,) * _n)
 
-    zeros = (jnp.zeros((d * ninc,), jnp.float32),
-             jnp.zeros((d * ninc,), jnp.float32),
-             jnp.zeros((n_pad,), jnp.float32),
-             jnp.zeros((n_pad,), jnp.float32))
+    zeros = (jnp.zeros((d * ninc,), accum),
+             jnp.zeros((d * ninc,), accum),
+             jnp.zeros((n_pad,), accum),
+             jnp.zeros((n_pad,), accum))
     n_in = 3 + len(flat_consts)     # positional index of the first zeros arg
     extra = {}
     if num_warps is not None:
@@ -270,10 +296,10 @@ def vegas_fill_gpu(key_bits, cube, edges_lo, widths, *, nstrat: int,
         ],
         out_specs=[full(d * ninc), full(d * ninc), full(n_pad), full(n_pad)],
         out_shape=[
-            jax.ShapeDtypeStruct((d * ninc,), jnp.float32),
-            jax.ShapeDtypeStruct((d * ninc,), jnp.float32),
-            jax.ShapeDtypeStruct((n_pad,), jnp.float32),
-            jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((d * ninc,), accum),
+            jax.ShapeDtypeStruct((d * ninc,), accum),
+            jax.ShapeDtypeStruct((n_pad,), accum),
+            jax.ShapeDtypeStruct((n_pad,), accum),
         ],
         input_output_aliases={n_in: 0, n_in + 1: 1, n_in + 2: 2, n_in + 3: 3},
         interpret=interpret,
@@ -282,10 +308,10 @@ def vegas_fill_gpu(key_bits, cube, edges_lo, widths, *, nstrat: int,
 
 
 def fill(edges, n_h, key, integrand, *, nstrat: int, n_cap: int, chunk: int,
-         dtype=jnp.float32, interpret: bool | None = None,
+         dtype=jnp.float32, accum_dtype=None, interpret: bool | None = None,
          block: int | None = None, num_warps: int | None = None,
          start_chunk=0, n_chunks: int | None = None, kahan: bool = False,
-         rng_in_kernel: bool | None = None):
+         return_comp: bool = False, rng_in_kernel: bool | None = None):
     """GPU-kernel fill returning ``core.fill.FillResult``, scan-chunked
     exactly like ``ops.fill``: chunk ``g`` draws from ``fold_in(key, g)``
     and ``start_chunk``/``n_chunks`` select a contiguous chunk range (the
@@ -296,25 +322,36 @@ def fill(edges, n_h, key, integrand, *, nstrat: int, n_cap: int, chunk: int,
     GPU platform, the Pallas interpreter elsewhere (CPU CI).
     ``rng_in_kernel=None`` resolves to ``not interpret`` — same XLA:CPU
     threefry escape hatch as the TPU path, bit-identical either way.
+    ``accum_dtype``/``return_comp`` follow the shared contract documented on
+    ``ops.fill`` (§15 widened accumulation; Kahan compensation pair for the
+    shard boundary).
     """
     from repro.core.fill import FillResult
     from .ops import hoist_closure, key_bits
 
+    if return_comp and not kahan:
+        raise ValueError("return_comp=True requires kahan=True (there is "
+                         "no compensation term to return)")
     interpret = resolve_interpret(interpret, family="gpu")
     if rng_in_kernel is None:
         rng_in_kernel = not interpret
     dtype = jnp.dtype(dtype)
+    accum = jnp.dtype(accum_dtype) if accum_dtype is not None else dtype
     if dtype != jnp.float32:
         raise ValueError(
             f"pallas-gpu is f32-only (the in-kernel RNG reproduces the f32 "
-            f"uniform bit pattern); got dtype={dtype}")
+            f"uniform bit pattern; widen accum_dtype instead, §15); "
+            f"got dtype={dtype}")
+    if accum not in (jnp.float32, jnp.float64):
+        raise ValueError(f"accum_dtype must be float32 or float64, "
+                         f"got {accum}")
     d = edges.shape[0]
     ninc = edges.shape[1] - 1
     n_cubes = n_h.shape[0]
     if n_chunks is None:
         assert n_cap % chunk == 0, (n_cap, chunk)
         n_chunks = n_cap // chunk
-    block = _pick_block(block, chunk, d, ninc)
+    block = _pick_block(block, chunk, d, ninc, accum.itemsize)
 
     edges_lo = edges[:, :-1].astype(dtype)
     widths = jnp.diff(edges, axis=1).astype(dtype)
@@ -329,7 +366,7 @@ def fill(edges, n_h, key, integrand, *, nstrat: int, n_cap: int, chunk: int,
             key_bits(k).reshape(1, 2), cube, edges_lo, widths,
             nstrat=nstrat, n_cubes=n_cubes, integrand=pure_ig, block=block,
             interpret=interpret, num_warps=num_warps, u=u,
-            ig_consts=ig_consts)
+            ig_consts=ig_consts, accum_dtype=accum)
         return FillResult(ms.reshape(d, ninc), mc.reshape(d, ninc),
                           s1p[:n_cubes], s2p[:n_cubes])
 
@@ -343,8 +380,10 @@ def fill(edges, n_h, key, integrand, *, nstrat: int, n_cap: int, chunk: int,
         comp = jax.tree.map(lambda tt, a, yy: (tt - a) - yy, t, acc, y)
         return (t, comp), None
 
-    zero = FillResult(jnp.zeros((d, ninc), dtype), jnp.zeros((d, ninc), dtype),
-                      jnp.zeros((n_cubes,), dtype), jnp.zeros((n_cubes,), dtype))
+    zero = FillResult(jnp.zeros((d, ninc), accum), jnp.zeros((d, ninc), accum),
+                      jnp.zeros((n_cubes,), accum), jnp.zeros((n_cubes,), accum))
     init = (zero, zero) if kahan else zero
     out, _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
-    return out[0] if kahan else out
+    if kahan:
+        return out if return_comp else out[0]
+    return out

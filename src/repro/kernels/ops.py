@@ -55,49 +55,60 @@ def key_bits(key) -> jax.Array:
     return key
 
 
-def tile_footprint_bytes(tile: int, d: int, ninc: int, n_cubes: int) -> int:
-    """VMEM footprint of one kernel tile under the DESIGN.md §7 budget math
-    (f32): the d pass-1 one-hots stay live for pass-2 reuse (d * tile *
-    ninc), the cube-window one-hot adds tile * span, the transform scratch
-    ~8 copies of (tile, d), plus the grid-resident state — map
-    tables/accumulators (3 * d * ninc) and the two (rows, LANE) cube-moment
-    accumulators (~2.1 MB at the max_cubes = 2^18 cap), which shrink the
-    budget available to per-tile scratch."""
+def tile_footprint_bytes(tile: int, d: int, ninc: int, n_cubes: int, *,
+                         accum_itemsize: int = 4) -> int:
+    """VMEM footprint of one kernel tile under the DESIGN.md §7/§15 budget
+    math: the d pass-1 one-hots stay live for pass-2 reuse (d * tile * ninc,
+    f32 — products feed the MXU in the sample dtype), the cube-window
+    one-hot adds tile * span, the transform scratch ~8 copies of (tile, d),
+    plus the grid-resident state — the f32 map tables (2 * d * ninc) and the
+    ACCUMULATORS at ``accum_itemsize`` bytes apiece: the (d, ninc) ms/mc
+    histogram pair and the two (rows, LANE) cube-moment tiles (~2.1 MB f32 /
+    ~4.2 MB f64 at the max_cubes = 2^18 cap).  Widened f64 accumulation
+    therefore shrinks the budget available to per-tile scratch — the §15
+    VMEM tradeoff `valid_tiles` prices."""
     span = vk.span_for_tile(tile)
-    resident = 4 * (3 * d * ninc + 2 * vk.padded_cube_rows(n_cubes, tile)
-                    * vk.LANE)
+    resident = (4 * 2 * d * ninc
+                + accum_itemsize * (2 * d * ninc
+                                    + 2 * vk.padded_cube_rows(n_cubes, tile)
+                                    * vk.LANE))
     return 4 * (d * tile * ninc + tile * span + 8 * tile * d) + resident
 
 
 def valid_tiles(chunk: int, d: int, ninc: int, n_cubes: int, *,
                 vmem_budget: int = 8 << 20,
-                max_tile: int = 1024) -> list[int]:
+                max_tile: int = 1024, accum_itemsize: int = 4) -> list[int]:
     """Every tile the kernel accepts for this shape, ascending: divisors of
     ``chunk`` whose :func:`tile_footprint_bytes` fits the VMEM budget.
 
     This is the single validity oracle shared by :func:`autotune_tile` (which
     takes the largest entry) and the plan autotuner (`engine.autotune`, which
     scores entries with the measured cost model) — so the autotuner can never
-    choose a tile the kernel would reject.
+    choose a tile the kernel would reject.  ``accum_itemsize`` prices the
+    grid-resident accumulators (8 under an f64 PrecisionPolicy, §15).
     """
     return [t for t in range(1, min(chunk, max_tile) + 1)
             if chunk % t == 0
-            and tile_footprint_bytes(t, d, ninc, n_cubes) <= vmem_budget]
+            and tile_footprint_bytes(t, d, ninc, n_cubes,
+                                     accum_itemsize=accum_itemsize)
+            <= vmem_budget]
 
 
 def autotune_tile(chunk: int, d: int, ninc: int, n_cubes: int, *,
-                  vmem_budget: int = 8 << 20, max_tile: int = 1024) -> int:
+                  vmem_budget: int = 8 << 20, max_tile: int = 1024,
+                  accum_itemsize: int = 4) -> int:
     """Largest tile that divides ``chunk`` and fits the VMEM budget (the
     static default when no measured cost table picks one)."""
     tiles = valid_tiles(chunk, d, ninc, n_cubes, vmem_budget=vmem_budget,
-                        max_tile=max_tile)
+                        max_tile=max_tile, accum_itemsize=accum_itemsize)
     return tiles[-1] if tiles else 1
 
 
 def _pick_tile(tile: int | None, chunk: int, d: int, ninc: int,
-               n_cubes: int) -> int:
+               n_cubes: int, accum_itemsize: int = 4) -> int:
     if tile is None:
-        tile = autotune_tile(chunk, d, ninc, n_cubes)
+        tile = autotune_tile(chunk, d, ninc, n_cubes,
+                             accum_itemsize=accum_itemsize)
     else:
         tile = min(tile, chunk)
         if chunk % tile != 0:
@@ -114,10 +125,10 @@ def _pick_tile(tile: int | None, chunk: int, d: int, ninc: int,
 
 
 def fill(edges, n_h, key, integrand, *, nstrat: int, n_cap: int, chunk: int,
-         dtype=jnp.float32, interpret: bool | None = None,
+         dtype=jnp.float32, accum_dtype=None, interpret: bool | None = None,
          fused_cubes: bool = True, tile: int | None = None, start_chunk=0,
          n_chunks: int | None = None, kahan: bool = False,
-         rng_in_kernel: bool | None = None):
+         return_comp: bool = False, rng_in_kernel: bool | None = None):
     """Kernel-backed fill pass returning core.fill.FillResult.
 
     RNG follows the same global-chunk contract as core.fill.fill_reference:
@@ -130,24 +141,40 @@ def fill(edges, n_h, key, integrand, *, nstrat: int, n_cap: int, chunk: int,
     kernel generates its own uniforms when compiled for TPU (zero per-eval
     float traffic), while the interpreter gets them precomputed per chunk —
     bit-identical either way, see ``vegas_fill.vegas_fill_fused``.
+
+    ``accum_dtype`` (default: ``dtype``) widens every moment accumulator
+    (§15): products stay f32 for the MXU, but the fused kernel's VMEM
+    accumulator tiles — and the baseline path's XLA scatter-adds — carry the
+    wider dtype, and the returned FillResult comes back in it.
+    ``return_comp=True`` (with ``kahan=True``) returns the (sums,
+    compensation) pair for the shard-boundary psum — see
+    ``core.fill.fill_reference``.
     """
     from repro.core.fill import FillResult
 
+    if return_comp and not kahan:
+        raise ValueError("return_comp=True requires kahan=True (there is "
+                         "no compensation term to return)")
     interpret = resolve_interpret(interpret)
     if rng_in_kernel is None:
         rng_in_kernel = not interpret
     dtype = jnp.dtype(dtype)
+    accum = jnp.dtype(accum_dtype) if accum_dtype is not None else dtype
     d = edges.shape[0]
     ninc = edges.shape[1] - 1
     n_cubes = n_h.shape[0]
     if n_chunks is None:
         assert n_cap % chunk == 0, (n_cap, chunk)
         n_chunks = n_cap // chunk
-    tile = _pick_tile(tile, chunk, d, ninc, n_cubes)
+    tile = _pick_tile(tile, chunk, d, ninc, n_cubes, accum.itemsize)
     if fused_cubes and dtype != jnp.float32:
         raise ValueError(
-            f"fused_cubes=True is f32-only (the in-kernel RNG reproduces the "
-            f"f32 uniform bit pattern); got dtype={dtype}")
+            f"fused_cubes=True is f32-only samples (the in-kernel RNG "
+            f"reproduces the f32 uniform bit pattern; widen accum_dtype "
+            f"instead, §15); got dtype={dtype}")
+    if accum not in (jnp.float32, jnp.float64):
+        raise ValueError(f"accum_dtype must be float32 or float64, "
+                         f"got {accum}")
 
     edges_lo = edges[:, :-1].astype(dtype)
     widths = jnp.diff(edges, axis=1).astype(dtype)
@@ -162,7 +189,8 @@ def fill(edges, n_h, key, integrand, *, nstrat: int, n_cap: int, chunk: int,
             ms, mc, s1p, s2p = vk.vegas_fill_fused(
                 key_bits(k).reshape(1, 2), cube.reshape(chunk, 1), edges_lo,
                 widths, nstrat=nstrat, n_cubes=n_cubes, integrand=pure_ig,
-                tile=tile, interpret=interpret, u=u, ig_consts=ig_consts)
+                tile=tile, interpret=interpret, u=u, ig_consts=ig_consts,
+                accum_dtype=accum)
             return FillResult(ms, mc, s1p.reshape(-1)[:n_cubes],
                               s2p.reshape(-1)[:n_cubes])
         u = jax.random.uniform(k, (chunk, d), dtype=dtype)
@@ -170,12 +198,15 @@ def fill(edges, n_h, key, integrand, *, nstrat: int, n_cap: int, chunk: int,
                                   nstrat=nstrat, n_cubes=n_cubes,
                                   integrand=pure_ig, tile=tile,
                                   interpret=interpret, ig_consts=ig_consts)
-        w = w.reshape(chunk)
+        # The baseline kernel streams per-eval weights and per-chunk f32 map
+        # partials; the §15 widening happens at the accumulation boundary —
+        # the scatter below and the cross-chunk scan run in ``accum``.
+        w = w.reshape(chunk).astype(accum)
         # Per-cube reduction outside the kernel (ids are sorted; XLA lowers
         # this to a sorted-scatter; the overflow bucket is dropped).
-        s1 = jnp.zeros((n_cubes + 1,), dtype).at[cube].add(w)[:n_cubes]
-        s2 = jnp.zeros((n_cubes + 1,), dtype).at[cube].add(w * w)[:n_cubes]
-        return FillResult(ms, mc, s1, s2)
+        s1 = jnp.zeros((n_cubes + 1,), accum).at[cube].add(w)[:n_cubes]
+        s2 = jnp.zeros((n_cubes + 1,), accum).at[cube].add(w * w)[:n_cubes]
+        return FillResult(ms.astype(accum), mc.astype(accum), s1, s2)
 
     def body(carry, step):
         contrib = chunk_contrib(start_chunk + step)
@@ -187,8 +218,10 @@ def fill(edges, n_h, key, integrand, *, nstrat: int, n_cap: int, chunk: int,
         comp = jax.tree.map(lambda tt, a, yy: (tt - a) - yy, t, acc, y)
         return (t, comp), None
 
-    zero = FillResult(jnp.zeros((d, ninc), dtype), jnp.zeros((d, ninc), dtype),
-                      jnp.zeros((n_cubes,), dtype), jnp.zeros((n_cubes,), dtype))
+    zero = FillResult(jnp.zeros((d, ninc), accum), jnp.zeros((d, ninc), accum),
+                      jnp.zeros((n_cubes,), accum), jnp.zeros((n_cubes,), accum))
     init = (zero, zero) if kahan else zero
     out, _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
-    return out[0] if kahan else out
+    if kahan:
+        return out if return_comp else out[0]
+    return out

@@ -294,7 +294,7 @@ def padded_cube_rows(n_cubes: int, tile: int) -> int:
 
 def _fill_fused_kernel(*refs, nstrat: int, n_cubes: int, ninc: int,
                        chunk: int, tile: int, d: int, integrand,
-                       rng_in_kernel: bool):
+                       rng_in_kernel: bool, accum_dtype=jnp.float32):
     (rng_or_u_ref, cube_ref, ew_ref, *const_refs,
      ms_ref, mc_ref, s1_ref, s2_ref) = refs
     if rng_in_kernel:
@@ -360,12 +360,16 @@ def _fill_fused_kernel(*refs, nstrat: int, n_cubes: int, ninc: int,
 
     # ---- pass 2: map histogram.  REUSES the pass-1 one-hots (no second
     # construction) and contracts [w2, cnt] in ONE stacked matmul per dim
-    # (the baseline runs two). ----
+    # (the baseline runs two).  Products run in f32 on the MXU; the §15
+    # widening happens on the per-tile partial, just before the running
+    # sum into the (possibly f64) VMEM accumulator ref. ----
+    accum = jnp.dtype(accum_dtype)
     w2cnt = jnp.concatenate([w2, cnt], axis=1)                  # (tile, 2)
     for k in range(d):
         m_k = jax.lax.dot_general(
             w2cnt, ohs[k], (((0,), (0,)), ((), ())),
             preferred_element_type=dtype)                       # (2, ninc)
+        m_k = m_k.astype(accum)
         ms_ref[k:k + 1, :] += m_k[0:1, :]
         mc_ref[k:k + 1, :] += m_k[1:2, :]
 
@@ -386,21 +390,30 @@ def _fill_fused_kernel(*refs, nstrat: int, n_cubes: int, ninc: int,
         preferred_element_type=dtype)                           # (2, span)
     rows_n = span // LANE
     br = base // LANE
-    p1 = parts[0:1, :].reshape(rows_n, LANE)
-    p2 = parts[1:2, :].reshape(rows_n, LANE)
+    # Same §15 boundary as the map histogram: the one-hot contraction stays
+    # f32, each tile's (rows_n, LANE) partial is widened once before the
+    # grid-sequential += into the accumulator tiles.
+    p1 = parts[0:1, :].reshape(rows_n, LANE).astype(accum)
+    p2 = parts[1:2, :].reshape(rows_n, LANE).astype(accum)
     s1_ref[pl.ds(br, rows_n), :] += p1
     s2_ref[pl.ds(br, rows_n), :] += p2
 
 
 def vegas_fill_fused(key_bits, cube, edges_lo, widths, *, nstrat: int,
                      n_cubes: int, integrand, tile: int = 256,
-                     interpret: bool = True, u=None, ig_consts=()):
+                     interpret: bool = True, u=None, ig_consts=(),
+                     accum_dtype=None):
     """pallas_call wrapper for the P-V3 streaming kernel (one chunk).
 
     Args:
       key_bits: (1, 2) uint32 raw key data of ``fold_in(key, gchunk)``.
       cube:     (chunk, 1) int32 SORTED cube ids; ``n_cubes`` == masked.
       edges_lo/widths: (d, ninc) f32 map tables.
+      accum_dtype: accumulator dtype (default f32).  Under the §15 widened
+                policy the four output buffers — and the VMEM accumulator
+                tiles behind them — are f64 while every product (transform,
+                integrand, one-hot matmuls) stays f32 for the MXU; each
+                tile's partial is widened once before the running ``+=``.
       u:        optional (chunk, d) f32 uniforms.  ``None`` (the compiled-TPU
                 default) generates them IN-KERNEL from ``key_bits`` — zero
                 per-eval input traffic.  Passing the precomputed chunk block
@@ -419,6 +432,7 @@ def vegas_fill_fused(key_bits, cube, edges_lo, widths, *, nstrat: int,
     d, ninc = edges_lo.shape
     assert chunk % tile == 0, (chunk, tile)
     assert edges_lo.dtype == jnp.float32, "fused path is f32-only (RNG contract)"
+    accum = jnp.dtype(accum_dtype) if accum_dtype is not None else jnp.float32
     rows = padded_cube_rows(n_cubes, tile)
     rng_in_kernel = u is None
     # Interleave the two map tables (rows 2k / 2k+1 = edges_k / widths_k) so
@@ -429,7 +443,7 @@ def vegas_fill_fused(key_bits, cube, edges_lo, widths, *, nstrat: int,
     kernel = functools.partial(
         _fill_fused_kernel, nstrat=nstrat, n_cubes=n_cubes, ninc=ninc,
         chunk=chunk, tile=tile, d=d, integrand=kig,
-        rng_in_kernel=rng_in_kernel)
+        rng_in_kernel=rng_in_kernel, accum_dtype=accum)
     grid = (chunk // tile,)
     first_in = (key_bits, pl.BlockSpec((1, 2), lambda i: (0, 0))) \
         if rng_in_kernel else (u, pl.BlockSpec((tile, d), lambda i: (i, 0)))
@@ -449,10 +463,10 @@ def vegas_fill_fused(key_bits, cube, edges_lo, widths, *, nstrat: int,
             pl.BlockSpec((rows, LANE), lambda i: (0, 0)),   # cube s2
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((d, ninc), jnp.float32),
-            jax.ShapeDtypeStruct((d, ninc), jnp.float32),
-            jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
-            jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+            jax.ShapeDtypeStruct((d, ninc), accum),
+            jax.ShapeDtypeStruct((d, ninc), accum),
+            jax.ShapeDtypeStruct((rows, LANE), accum),
+            jax.ShapeDtypeStruct((rows, LANE), accum),
         ],
         interpret=interpret,
     )(first_in[0], cube, ew, *flat_consts)

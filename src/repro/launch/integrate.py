@@ -21,7 +21,8 @@ from repro.configs.vegas import PAPER_CONFIGS
 from repro.core import VegasConfig
 from repro.core import integrands as igs
 from repro.engine import (CheckpointPolicy, ExecutionConfig, GradPolicy,
-                          StopPolicy, available, execute, make_plan)
+                          PrecisionPolicy, StopPolicy, available, execute,
+                          make_plan)
 from repro.launch import env
 
 INTEGRANDS = {
@@ -60,6 +61,13 @@ def add_execution_args(ap: argparse.ArgumentParser) -> None:
                          "shared-memory autotune, gpu_fill.autotune_block)")
     ap.add_argument("--num-warps", type=int, default=None,
                     help="pallas-gpu Triton num_warps override")
+    ap.add_argument("--accum-dtype", choices=["float32", "float64"],
+                    default=None,
+                    help="accumulation dtype (§15 PrecisionPolicy): widen "
+                         "the moment accumulators without changing the "
+                         "sample dtype (float64 needs JAX_ENABLE_X64=1 / "
+                         "--x64; validated at plan time against the "
+                         "backend's declared precision pairs)")
     ap.add_argument("--autotune", action="store_true",
                     help="pick chunk/tile/batch/shard knobs from the "
                          "measured cost model (engine.autotune, §13); "
@@ -109,11 +117,14 @@ def build_execution(args, **extra) -> ExecutionConfig:
             if (args.rtol != 0 or args.atol != 0) else None)
     grad = (GradPolicy(mode=args.grad, with_sdev=not args.no_grad_sdev)
             if args.grad != "off" else None)
+    precision = (PrecisionPolicy(accum_dtype=args.accum_dtype)
+                 if getattr(args, "accum_dtype", None) else None)
     return ExecutionConfig(backend=args.backend, interpret=interpret,
                            tile=args.tile, block=args.block,
                            num_warps=args.num_warps, mesh=mesh, stop=stop,
                            grad=grad, autotune=args.autotune,
-                           cost_table=args.cost_table, **extra)
+                           cost_table=args.cost_table, precision=precision,
+                           **extra)
 
 
 def main(argv=None):

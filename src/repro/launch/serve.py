@@ -50,7 +50,8 @@ def _demo_burst(args) -> list[IntegrationRequest]:
     return [IntegrationRequest(
         family=args.family, params=[float(p)], rtol=args.rtol,
         atol=args.atol, time_budget_s=args.time_budget, seed=i,
-        neval=args.neval, max_it=args.iters) for i, p in enumerate(params)]
+        neval=args.neval, max_it=args.iters,
+        accum_dtype=args.accum_dtype) for i, p in enumerate(params)]
 
 
 def main(argv=None):
@@ -68,6 +69,11 @@ def main(argv=None):
                     help="per-request wall-clock budget (seconds)")
     ap.add_argument("--neval", type=int, default=20_000)
     ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--accum-dtype", choices=["float32", "float64"],
+                    default=None,
+                    help="demo requests' §15 accumulation dtype (float64 "
+                         "needs --x64; JSONL requests carry their own "
+                         "accum_dtype field)")
     ap.add_argument("--max-batch", type=int, default=16,
                     help="scenarios per coalesced micro-batch")
     ap.add_argument("--max-wait", type=float, default=0.02,

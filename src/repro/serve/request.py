@@ -59,6 +59,10 @@ class IntegrationRequest:
     beta: float = 0.75
     chunk: int = 16_384
     dtype: str = "float32"
+    #: §15 accumulation dtype (None = accumulate in ``dtype``).  Part of the
+    #: compatibility key: requests under different precision policies never
+    #: coalesce into one program.
+    accum_dtype: str | None = None
     backend: str = "ref"
     interpret: bool | None = None
     tile: int | None = None
@@ -78,7 +82,8 @@ class IntegrationRequest:
         return (self.family, tuple(self.family_kwargs), self.neval,
                 self.max_it, self.skip, self.ninc, self.alpha, self.beta,
                 self.chunk, self.dtype, self.backend, self.interpret,
-                self.tile, self.rtol, self.atol, self.min_it)
+                self.tile, self.rtol, self.atol, self.min_it,
+                self.accum_dtype)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -52,7 +52,8 @@ from repro.batch.engine import scenario_keys
 from repro.batch.family import (IntegrandFamily, make_asian_family,
                                 make_gaussian_family, make_ridge_family)
 from repro.core import integrator as core
-from repro.engine import ExecutionConfig, PlanError, StopPolicy, make_plan
+from repro.engine import (ExecutionConfig, PlanError, PrecisionPolicy,
+                          StopPolicy, make_plan)
 from repro.engine import autotune as autotune_mod
 from repro.engine import executor as executor_mod
 
@@ -63,18 +64,21 @@ from .request import IntegrationRequest, RequestResult, Ticket
 @dataclasses.dataclass(frozen=True)
 class ServedFamily:
     """A servable integrand family: how to normalize request params and
-    build the (possibly coalesced) `IntegrandFamily` from them."""
+    build the (possibly coalesced) `IntegrandFamily` from them.
+    ``normalize(params, dtype)`` receives the REQUEST's dtype — params must
+    come back in it, or the family's vmapped closure constants silently
+    promote the whole fill to float64 (the §15 dtype-correctness audit)."""
     name: str
     build: Callable[..., IntegrandFamily]
-    normalize: Callable[[Any], np.ndarray]
+    normalize: Callable[..., np.ndarray]
 
 
-def _norm_1d(params) -> np.ndarray:
-    return np.atleast_1d(np.asarray(params, np.float64))
+def _norm_1d(params, dtype=np.float64) -> np.ndarray:
+    return np.atleast_1d(np.asarray(params, dtype))
 
 
-def _norm_2d(params) -> np.ndarray:
-    return np.atleast_2d(np.asarray(params, np.float64))
+def _norm_2d(params, dtype=np.float64) -> np.ndarray:
+    return np.atleast_2d(np.asarray(params, dtype))
 
 
 #: The default serving registry: family name -> builder taking ONE
@@ -156,7 +160,10 @@ class SweepService:
                 f"unknown served family {request.family!r}; served: "
                 f"{sorted(self.families)}")
         try:
-            params = spec.normalize(request.params)
+            # Normalize INTO the request's dtype: a float64 param array
+            # closed over by the family would otherwise promote every
+            # sample/product in the fill to f64 behind the plan's back.
+            params = spec.normalize(request.params, np.dtype(request.dtype))
         except Exception as e:
             raise PlanError(
                 f"family {request.family!r} params not normalizable: "
@@ -177,9 +184,12 @@ class SweepService:
         stop = (StopPolicy(rtol=request.rtol, atol=request.atol,
                            min_it=request.min_it)
                 if (request.rtol != 0 or request.atol != 0) else None)
+        precision = (PrecisionPolicy(accum_dtype=request.accum_dtype)
+                     if request.accum_dtype else None)
         execution = ExecutionConfig(
             backend=request.backend, interpret=request.interpret,
-            tile=request.tile, batch="vmap", stop=stop)
+            tile=request.tile, batch="vmap", stop=stop,
+            precision=precision)
         cfg = core.VegasConfig(
             neval=request.neval, max_it=request.max_it, skip=request.skip,
             ninc=request.ninc, alpha=request.alpha, beta=request.beta,

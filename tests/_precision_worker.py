@@ -1,0 +1,76 @@
+"""Subprocess worker for the Kahan shard-boundary regression (§15).
+
+Device-count invariance at Kahan-level accuracy: the sharded fill carries
+the compensation through the psum (`make_local_fill` returns
+psum(sums) - psum(comp)), so the combined moments on ANY shard count stay
+within a few ulps of the f64 ground truth — the per-shard partials are each
+exact to ~1 ulp and the boundary loses nothing beyond the final psum's own
+rounding.  This worker forces 4 host devices and asserts 1-, 2- and 4-shard
+fills all sit at that floor, and within a few ulps of EACH OTHER.  The
+bounds are ~6x the measured error; a combination that dropped whole
+partials, double-counted a shard, or fell back to plain per-shard f32
+summation blows them by orders of magnitude.  Run by tests/test_precision.py
+in a subprocess so the forced device count never leaks."""
+
+import os
+
+from repro.launch import env as launch_env
+
+launch_env.set_host_device_count(4)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ["JAX_ENABLE_X64"] = "1"   # for the f64 ground-truth fill
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import fill as F  # noqa: E402
+from repro.core import integrator as I  # noqa: E402
+from repro.core.integrands import make_cosine  # noqa: E402
+from repro.dist import sharded_fill as SF  # noqa: E402
+
+FIELDS = ("map_sums", "map_counts", "cube_s1", "cube_s2")
+
+
+def main():
+    assert jax.device_count() == 4, jax.device_count()
+    ig = make_cosine(dim=2)
+    # Accumulation-hostile: many chunks per shard, so per-shard summation
+    # error (were it not Kahan-carried) would dominate the bound.
+    cfg = I.VegasConfig(neval=32_768, max_it=1, skip=0, ninc=64, chunk=512)
+    rc = cfg.resolve(ig.dim)
+    st = I.init_state(ig, rc, jax.random.PRNGKey(0))
+    key_it = jax.random.fold_in(st.key, st.it)
+
+    truth = F.fill_reference(st.edges, st.n_h, key_it, ig, nstrat=rc.nstrat,
+                             n_cap=rc.n_cap, chunk=rc.chunk,
+                             accum_dtype=jnp.float64)
+    truth = {f: np.asarray(getattr(truth, f), np.float64) for f in FIELDS}
+    scale = {f: max(1.0, float(np.max(np.abs(t))))
+             for f, t in truth.items()}
+
+    results = {}
+    for k in (1, 2, 4):
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:k]), ("data",))
+        fill = SF.make_sharded_fill(mesh, ("data",), rc)
+        res = fill(st.edges, st.n_h, key_it, ig)
+        # Pull to host before comparing: arrays from different meshes must
+        # not meet inside a jitted op.
+        results[k] = {f: np.asarray(getattr(res, f), np.float64)
+                      for f in FIELDS}
+        for f in FIELDS:
+            err = np.max(np.abs(results[k][f] - truth[f])) / scale[f]
+            assert err < 5e-6, (k, f, err)
+        print(f"CHECK shards={k} at the Kahan floor OK")
+
+    for k in (2, 4):
+        for f in FIELDS:
+            spread = (np.max(np.abs(results[k][f] - results[1][f]))
+                      / scale[f])
+            assert spread < 5e-6, (k, f, spread)
+    print("CHECK device-count invariance OK")
+    print("ALL_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -87,11 +87,13 @@ def _sorted_inputs(key, chunk, d, ninc, nstrat, n_live):
                                       dtype=jnp.int32))
     cube = jnp.concatenate(
         [ids, jnp.full((chunk - n_live,), n_cubes, jnp.int32)])
+    # dtype pinned: the fused path is f32-only (RNG contract), and under
+    # JAX_ENABLE_X64=1 the float defaults here would silently become f64.
     w = jax.random.uniform(jax.random.fold_in(key, 1), (d, ninc),
-                           minval=0.05, maxval=1.0)
+                           minval=0.05, maxval=1.0, dtype=jnp.float32)
     w = w / w.sum(1, keepdims=True)
     edges_lo = jnp.concatenate(
-        [jnp.zeros((d, 1)), jnp.cumsum(w, 1)[:, :-1]], axis=1)
+        [jnp.zeros((d, 1), jnp.float32), jnp.cumsum(w, 1)[:, :-1]], axis=1)
     return cube.reshape(chunk, 1), edges_lo, w, n_cubes
 
 
